@@ -1,0 +1,51 @@
+"""Shared benchmark utilities: spaces, thresholds, timing."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import idim as idim_lib
+from repro.core import metrics as metrics_lib
+from repro.data.synthetic import metric_space
+
+SPACES = [("euclidean", "euc"), ("jsd", "jsd"), ("triangular", "tri")]
+
+
+def make_space(metric_name: str, dim: int, n: int, nq: int, seed: int = 0):
+    """Paper §6.1: uniform unit hypercube; simplex metrics row-normalised
+    (footnote 6 — euc is NOT normalised; jsd/tri are)."""
+    simplex = metrics_lib.get(metric_name).simplex
+    pts = metric_space(seed, n + nq, dim, simplex=simplex)
+    return pts[:n], pts[n:]
+
+
+def thresholds_for(metric_name: str, data, queries, ns=(1, 4, 16)):
+    m = metrics_lib.get(metric_name)
+    return idim_lib.calibrate_thresholds(m, data, queries, ns=ns)
+
+
+def timed(fn, *args, repeat: int = 1, **kw):
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        out = fn(*args, **kw)
+    dt = (time.perf_counter() - t0) / repeat
+    return out, dt * 1e6         # us
+
+
+def check_vs_oracle(data, queries, t, sets, ref_sets, *, tol=1e-4,
+                    context=""):
+    """Exact-search check vs the brute-force oracle, tolerant ONLY to
+    boundary ids whose f64 distance is within ``tol`` of t (the oracle
+    and the traversal use different f32 reduction orders; ids that far
+    inside/outside the ball must never differ).  Mechanism-vs-mechanism
+    comparisons stay exact (paper §6.5)."""
+    data64 = np.asarray(data, np.float64)
+    q64 = np.asarray(queries, np.float64)
+    for i, (s, r) in enumerate(zip(sets, ref_sets)):
+        for mid in s.symmetric_difference(r):
+            d = np.linalg.norm(q64[i] - data64[mid])
+            assert abs(d - t) < tol, (
+                f"{context}: q{i} id {mid} differs with |d-t|="
+                f"{abs(d - t):.3e} (not a boundary artifact)")

@@ -1,0 +1,111 @@
+"""Paper Table 3 / Figs 8-11: exclusion power of Hyperbolic vs Hilbert vs
+single-Pivot, per space and threshold.
+
+Power = P(random query can exclude the opposing semispace) over random
+pivot pairs.  Euclidean margins run through the FUSED Pallas kernel
+(repro.kernels.exclusion_step) — the exact compute this benchmark's TPU
+serving path would execute; simplex metrics use the jnp path.
+
+Paper validation (n=10^6, t1): euc_10 hyperbolic 12.2%, hilbert 44.3%,
+pivot 31.9%; euc_14 0.9% / 18.5% / 8.8%.  Power depends only on the
+distance distribution => small-n estimates converge fast.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import SPACES, make_space, thresholds_for
+from repro.core import metrics as metrics_lib
+from repro.kernels import ops as kernel_ops
+
+PAPER = {  # (space, mech) -> % at t1/t4/t16 (Table 3)
+    ("euc_10", "hyperbolic"): (12.2, 7.6, 4.3),
+    ("euc_10", "hilbert"): (44.3, 37.7, 30.8),
+    ("euc_10", "pivot"): (31.9, 25.1, 18.7),
+    ("euc_14", "hyperbolic"): (0.9, 0.4, 0.2),
+    ("euc_14", "hilbert"): (18.5, 14.2, 10.3),
+    ("jsd_10", "hyperbolic"): (11.4, 6.3, 3.0),
+    ("jsd_10", "hilbert"): (42.6, 34.4, 26.4),
+    ("tri_10", "hyperbolic"): (8.1, 4.1, 1.8),
+    ("tri_10", "hilbert"): (38.0, 29.7, 21.8),
+}
+
+
+def exclusion_power(metric_name: str, data: np.ndarray,
+                    queries: np.ndarray, pivot_pairs: int, t: float,
+                    seed: int = 0) -> dict:
+    rng = np.random.default_rng(seed)
+    n = data.shape[0]
+    m = metrics_lib.get(metric_name)
+    i = rng.choice(n, pivot_pairs, replace=False)
+    j = rng.choice(n, pivot_pairs, replace=False)
+    clash = i == j
+    j = np.where(clash, (j + 1) % n, j)
+    p1, p2 = data[i], data[j]
+
+    if metric_name == "euclidean":
+        d12 = np.linalg.norm(
+            p1.astype(np.float64) - p2.astype(np.float64), axis=-1
+        ).astype(np.float32)
+        hyp, hil = kernel_ops.exclusion_margins(queries, p1, p2, d12)
+        hyp, hil = np.asarray(hyp), np.asarray(hil)
+        d1 = np.asarray(kernel_ops.pairwise_distance(
+            queries, p1, "euclidean"))
+    else:
+        d1 = np.asarray(m.pairwise(queries, p1))
+        d2 = np.asarray(m.pairwise(queries, p2))
+        d12 = np.asarray(
+            m.pairwise(p1, p2)).diagonal() if pivot_pairs <= 512 else None
+        if d12 is None:
+            from repro.core.idim import rowwise_distance
+            d12 = np.asarray(rowwise_distance(m, p1, p2))
+        hyp = 0.5 * (d1 - d2)
+        hil = np.where(d12[None, :] > 1e-9,
+                       (d1 ** 2 - d2 ** 2) / (2 * np.maximum(d12, 1e-12)),
+                       0.0)
+
+    # two-sided: a query excludes if EITHER side is excludable
+    p_hyp = float(np.mean(np.abs(hyp) > t))
+    p_hil = float(np.mean(np.abs(hil) > t))
+
+    # single-pivot (Fig 10): median-radius ball around p1
+    sample = data[rng.choice(n, min(n, 4096), replace=False)]
+    if metric_name == "euclidean":
+        dmed = np.asarray(kernel_ops.pairwise_distance(
+            sample, p1, "euclidean"))
+    else:
+        dmed = np.asarray(m.pairwise(sample, p1))
+    med = np.median(dmed, axis=0)                       # (P,)
+    p_piv = float(np.mean(np.abs(d1 - med[None, :]) > t))
+    return {"hyperbolic": p_hyp, "hilbert": p_hil, "pivot": p_piv}
+
+
+def run(n: int = 32768, nq: int = 256, pivot_pairs: int = 256,
+        dims=(6, 8, 10, 12, 14), seed: int = 0):
+    rows = []
+    for metric_name, short in SPACES:
+        for d in dims:
+            data, queries = make_space(metric_name, d, n, nq, seed)
+            ts = thresholds_for(metric_name, data, queries)
+            for tn in (1, 4, 16):
+                pw = exclusion_power(metric_name, data, queries,
+                                     pivot_pairs, ts[tn], seed)
+                rows.append({
+                    "space": f"{short}_{d}", "t": f"t{tn}",
+                    **{k: round(100 * v, 1) for k, v in pw.items()},
+                })
+    return rows
+
+
+def main(argv=None):
+    print("table3_exclusion_power (percent)")
+    print("space,t,hyperbolic,hilbert,pivot,hilbert_over_hyperbolic")
+    for r in run():
+        ratio = round(r["hilbert"] / max(r["hyperbolic"], 1e-3), 2)
+        print(f"{r['space']},{r['t']},{r['hyperbolic']},{r['hilbert']},"
+              f"{r['pivot']},{ratio}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,82 @@
+"""Paper Table 4 / Fig 12: GHT + MHT query cost (mean distance
+evaluations per query, % of n) under Hyperbolic vs Hilbert exclusion.
+
+Same index, same queries — only the exclusion predicate changes.
+Correctness (§6.5) is asserted in-line: all four mechanisms must return
+identical result sets (vs brute force).
+
+Paper validation (n=10^6): euc_10 GHT 1.19% -> 0.68%, MHT 1.00% ->
+0.48% at t1; the RATIOS are the reproduction target at smaller n.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import (SPACES, check_vs_oracle, make_space,
+                               thresholds_for)
+from repro.core import bruteforce
+from repro.core.tree import build_ght, build_mht, search_binary_tree
+
+PAPER_RATIOS = {  # space -> (ght t1 hil/hyp, mht t1 hil/hyp)
+    "euc_10": (0.68 / 1.19, 0.48 / 1.00),
+    "euc_14": (6.25 / 9.92, 4.47 / 7.67),
+    "jsd_10": (0.90 / 1.50, 0.68 / 1.35),
+    "tri_10": (1.11 / 1.95, 0.84 / 1.66),
+}
+
+
+def run(n: int = 32768, nq: int = 128, dims=(6, 10, 14), tns=(1, 16),
+        leaf_size: int = 16, seed: int = 0, check: bool = True):
+    rows = []
+    for metric_name, short in SPACES:
+        for d in dims:
+            data, queries = make_space(metric_name, d, n, nq, seed)
+            ts = thresholds_for(metric_name, data, queries)
+            trees = {
+                "ght": build_ght(data, metric_name, leaf_size=leaf_size,
+                                 seed=seed + 1),
+                "mht": build_mht(data, metric_name, leaf_size=leaf_size,
+                                 seed=seed + 1),
+            }
+            for tn in tns:
+                t = ts[tn]
+                ref_sets = None
+                if check:
+                    _, ref_sets = bruteforce.range_search(
+                        data, queries, t, metric_name=metric_name)
+                row = {"space": f"{short}_{d}", "t": f"t{tn}"}
+                for kind, tree in trees.items():
+                    mech_sets = {}
+                    for mech in ("hyperbolic", "hilbert"):
+                        st = search_binary_tree(
+                            tree, queries, t, metric_name=metric_name,
+                            mechanism=mech, r_cap=512)
+                        mech_sets[mech] = st.result_sets()
+                        if check:
+                            check_vs_oracle(
+                                data, queries, t, mech_sets[mech],
+                                ref_sets,
+                                context=f"{short}_{d}/{kind}/{mech}")
+                        nd = float(np.mean(np.asarray(st.n_dist)))
+                        row[f"{kind}_{mech[:3]}"] = round(100 * nd / n, 3)
+                    assert mech_sets["hyperbolic"] == mech_sets["hilbert"]
+                row["ght_ratio"] = round(
+                    row["ght_hil"] / max(row["ght_hyp"], 1e-9), 3)
+                row["mht_ratio"] = round(
+                    row["mht_hil"] / max(row["mht_hyp"], 1e-9), 3)
+                rows.append(row)
+    return rows
+
+
+def main(argv=None):
+    print("table4_ght_mht_cost (mean distance evals per query, % of n)")
+    print("space,t,ght_hyp,ght_hil,mht_hyp,mht_hil,ght_ratio,mht_ratio")
+    for r in run():
+        print(f"{r['space']},{r['t']},{r['ght_hyp']},{r['ght_hil']},"
+              f"{r['mht_hyp']},{r['mht_hil']},{r['ght_ratio']},"
+              f"{r['mht_ratio']}")
+
+
+if __name__ == "__main__":
+    main()

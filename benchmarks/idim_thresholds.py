@@ -1,0 +1,59 @@
+"""Paper Table 2: IDIM + query thresholds per space.
+
+Validation targets (paper values at n=10^6): euc_6 IDIM 7.70, euc_10
+13.36, euc_14 19.13, jsd_10 9.49, tri_10 10.46 — IDIM is a property of
+the distance distribution, so a smaller sample reproduces it closely.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import SPACES, make_space, thresholds_for, timed
+from repro.core import idim as idim_lib
+from repro.core import metrics as metrics_lib
+
+PAPER_IDIM = {
+    ("euc", 6): 7.698, ("euc", 8): 10.40, ("euc", 10): 13.36,
+    ("euc", 12): 16.23, ("euc", 14): 19.13,
+    ("jsd", 6): 5.162, ("jsd", 8): 7.273, ("jsd", 10): 9.486,
+    ("jsd", 12): 11.51, ("jsd", 14): 13.69,
+    ("tri", 6): 5.754, ("tri", 8): 8.181, ("tri", 10): 10.46,
+    ("tri", 12): 13.02, ("tri", 14): 15.60,
+}
+
+
+def run(n: int = 65536, nq: int = 96, dims=(6, 8, 10, 12, 14),
+        seed: int = 0):
+    rows = []
+    for metric_name, short in SPACES:
+        m = metrics_lib.get(metric_name)
+        for d in dims:
+            data, queries = make_space(metric_name, d, n, nq, seed)
+            (val, us) = timed(
+                lambda: float(idim_lib.idim(m, data, jax.random.PRNGKey(0),
+                                            n_pairs=8192)))
+            ts = thresholds_for(metric_name, data, queries)
+            paper = PAPER_IDIM.get((short, d))
+            rows.append({
+                "space": f"{short}_{d}", "idim": round(val, 3),
+                "paper_idim": paper,
+                "rel_err": round(abs(val - paper) / paper, 3) if paper
+                else None,
+                "t1": round(ts[1], 4), "t4": round(ts[4], 4),
+                "t16": round(ts[16], 4), "us": us,
+            })
+    return rows
+
+
+def main(argv=None):
+    print("table2_idim_thresholds")
+    print("space,idim,paper_idim,rel_err,t1,t4,t16")
+    for r in run():
+        print(f"{r['space']},{r['idim']},{r['paper_idim']},{r['rel_err']},"
+              f"{r['t1']},{r['t4']},{r['t16']}")
+
+
+if __name__ == "__main__":
+    main()

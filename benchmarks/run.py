@@ -1,0 +1,42 @@
+"""Benchmark driver: one function per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run            # all tables
+  PYTHONPATH=src python -m benchmarks.run table3     # one table
+
+Output: per-table CSV blocks (name, values, derived ratios), then a
+summary `name,us_per_call,derived` line per table for harness parsing.
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+from benchmarks import (disat_realworld, exclusion_power, ght_mht_cost,
+                        idim_thresholds)
+
+TABLES = {
+    "table2": idim_thresholds.main,
+    "table3": exclusion_power.main,
+    "table4": ght_mht_cost.main,
+    "fig13": disat_realworld.main,
+}
+
+
+def main() -> None:
+    which = sys.argv[1:] or list(TABLES)
+    summary = []
+    for name in which:
+        fn = TABLES[name]
+        t0 = time.perf_counter()
+        fn()
+        dt = time.perf_counter() - t0
+        summary.append((name, dt * 1e6))
+        print()
+    print("name,us_per_call,derived")
+    for name, us in summary:
+        print(f"{name},{us:.0f},see-table-above")
+
+
+if __name__ == "__main__":
+    main()

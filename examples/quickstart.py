@@ -1,0 +1,35 @@
+"""Quickstart: the paper's contribution in 40 lines.
+
+Builds a metric index over Euclidean vectors, runs the same range query
+under Hyperbolic and Hilbert exclusion, and shows (a) identical results,
+(b) fewer distance evaluations with Hilbert — the paper's entire claim.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+
+from repro.core import bruteforce
+from repro.core.tree import build_mht, search_binary_tree
+
+rng = np.random.default_rng(0)
+data = rng.random((20000, 10)).astype(np.float32)     # unit hypercube
+queries = rng.random((32, 10)).astype(np.float32)
+t = 0.25                                              # range threshold
+
+# ground truth
+counts, truth = bruteforce.range_search(data, queries, t,
+                                        metric_name="euclidean")
+
+# one index, two exclusion mechanisms
+tree = build_mht(data, "euclidean", leaf_size=32, seed=0)
+for mechanism in ("hyperbolic", "hilbert"):
+    stats = search_binary_tree(tree, queries, t, metric_name="euclidean",
+                               mechanism=mechanism)
+    assert stats.result_sets() == truth, "exact search violated!"
+    nd = float(np.asarray(stats.n_dist).mean())
+    print(f"{mechanism:11s}: {nd:8.0f} distance evals/query "
+          f"({100 * nd / len(data):5.2f}% of brute force)  "
+          f"results identical: True")
+
+print("\nHilbert Exclusion: same answers, fewer distance evaluations.")

@@ -1,0 +1,80 @@
+"""Two-tower retrieval serving with the paper's technique.
+
+Trains a small two-tower model (in-batch sampled softmax), embeds a
+candidate corpus, then serves `retrieval_cand`-style queries two ways:
+
+  1. brute-force MXU dot-scan + top-k          (dry-run lowering)
+  2. Hilbert-exclusion metric index over d_cos (paper §5.5 space)
+
+and checks both return the same neighbours.
+
+  PYTHONPATH=src python examples/serve_retrieval.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get
+from repro.core import bruteforce
+from repro.core.tree import build_mht, search_binary_tree
+from repro.data import synthetic
+from repro.models import recsys as R
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+
+mod = get("two-tower-retrieval")
+cfg = mod.reduced_config()
+params = R.twotower_init(jax.random.PRNGKey(0), cfg)
+
+# --- short training run ----------------------------------------------------
+opt_cfg = AdamWConfig(lr=1e-3, warmup_steps=10, total_steps=200)
+opt = adamw_init(params)
+
+
+@jax.jit
+def step(params, opt, uids, iids):
+    loss, g = jax.value_and_grad(
+        lambda p: R.twotower_loss(p, cfg, uids, iids))(params)
+    params, opt, _ = adamw_update(params, g, opt, opt_cfg)
+    return params, opt, loss
+
+
+for s in range(200):
+    b = synthetic.retrieval_batch(
+        0, s, 64, cfg.n_user_feats, cfg.n_item_feats,
+        cfg.embed.vocab_sizes[0], cfg.embed.vocab_sizes[cfg.n_user_feats])
+    params, opt, loss = step(params, opt, jnp.asarray(b["user_ids"]),
+                             jnp.asarray(b["item_ids"]))
+    if s % 50 == 0:
+        print(f"train step {s:4d} loss {float(loss):.4f}")
+
+# --- embed a candidate corpus ------------------------------------------------
+n_cand = 20000
+rng = np.random.default_rng(1)
+cand_ids = np.stack([rng.integers(0, v, n_cand) for v in
+                     cfg.embed.vocab_sizes[cfg.n_user_feats:]],
+                    axis=1).astype(np.int32)
+cand_vecs = np.asarray(R.item_embed(params, cfg, jnp.asarray(cand_ids)))
+
+# --- serve: one query, 20k candidates ---------------------------------------
+uq = jnp.asarray(rng.integers(0, 16, (1, cfg.n_user_feats)), jnp.int32)
+scores, top_bf = R.retrieval_scores(params, cfg, uq, jnp.asarray(cand_vecs),
+                                    k=10)
+top_bf = set(np.asarray(top_bf)[0].tolist())
+print("\nbrute-force top-10:", sorted(top_bf))
+
+# metric-index backend: d_cos = sqrt(1 - dot) is rank-equivalent to the
+# dot score on normalised towers and HAS the four-point property
+u = np.asarray(R.user_embed(params, cfg, uq))
+d_cos = np.sqrt(np.maximum(1.0 - cand_vecs @ u[0], 0.0))
+kth = np.sort(d_cos)[9]                      # radius covering top-10
+
+tree = build_mht(cand_vecs, "cosine", leaf_size=32, seed=0)
+st = search_binary_tree(tree, u, kth + 1e-6, metric_name="cosine",
+                        mechanism="hilbert", r_cap=64)
+top_ix = set(st.result_sets()[0])
+nd = float(np.asarray(st.n_dist)[0])
+print(f"hilbert-index range search: {nd:.0f} distance evals "
+      f"({100 * nd / n_cand:.1f}% of corpus)")
+assert top_bf <= top_ix, (top_bf, top_ix)
+print("index result covers the brute-force top-10: True")

@@ -1,0 +1,1 @@
+from repro.configs.base import ARCH_IDS, CellProgram, all_cells, get  # noqa: F401

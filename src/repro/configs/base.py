@@ -1,0 +1,75 @@
+"""Arch registry: every assigned architecture is a module exposing
+
+  FAMILY            "lm" | "gnn" | "recsys" | "metric"
+  full_config()     exact published config (dry-run only — never allocated)
+  reduced_config()  smoke-test config (CPU-runnable)
+  shapes()          {shape_name: dims dict}
+  cell(shape, mesh) CellProgram for the dry-run
+  smoke(key)        runs one reduced forward/train step; returns outputs
+
+CellProgram.inputs are ShapeDtypeStructs (no allocation); fn is the
+jittable step; in_specs/out_specs are PartitionSpec pytrees.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Any, Callable, Optional
+
+ARCH_IDS = [
+    "granite-moe-3b-a800m",
+    "qwen3-moe-235b-a22b",
+    "llama3.2-1b",
+    "granite-3-2b",
+    "nemotron-4-340b",
+    "pna",
+    "bst",
+    "two-tower-retrieval",
+    "dcn-v2",
+    "dlrm-mlperf",
+    "metric-search",          # the paper's own workload, as an arch
+]
+
+_MODULES = {
+    "granite-moe-3b-a800m": "repro.configs.granite_moe_3b_a800m",
+    "qwen3-moe-235b-a22b": "repro.configs.qwen3_moe_235b_a22b",
+    "llama3.2-1b": "repro.configs.llama3_2_1b",
+    "granite-3-2b": "repro.configs.granite_3_2b",
+    "nemotron-4-340b": "repro.configs.nemotron_4_340b",
+    "pna": "repro.configs.pna",
+    "bst": "repro.configs.bst",
+    "two-tower-retrieval": "repro.configs.two_tower_retrieval",
+    "dcn-v2": "repro.configs.dcn_v2",
+    "dlrm-mlperf": "repro.configs.dlrm_mlperf",
+    "metric-search": "repro.configs.metric_search",
+}
+
+
+@dataclasses.dataclass
+class CellProgram:
+    """One (arch x shape) dry-run cell."""
+    arch: str
+    shape: str
+    kind: str                      # "train" | "serve"
+    fn: Callable                   # step function (positional args)
+    inputs: tuple                  # pytree of ShapeDtypeStruct, positional
+    in_specs: tuple                # matching PartitionSpec pytrees
+    out_specs: Any = None          # None => let GSPMD choose
+    donate: tuple = ()
+    model_flops_per_step: Optional[float] = None   # 6ND-style analytic
+
+
+def get(arch_id: str):
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {ARCH_IDS}")
+    return importlib.import_module(_MODULES[arch_id])
+
+
+def all_cells() -> list[tuple[str, str]]:
+    out = []
+    for a in ARCH_IDS:
+        mod = get(a)
+        for s in mod.shapes():
+            out.append((a, s))
+    return out

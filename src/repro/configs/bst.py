@@ -1,0 +1,99 @@
+"""bst  [recsys] Behaviour Sequence Transformer (Alibaba): embed_dim=32,
+seq_len=20, 1 block, 8 heads, mlp=1024-512-256  [arXiv:1905.06874]
+
+Item vocab 4M (Taobao-scale), plus user/context tables."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import recsys_common as C
+from repro.configs.base import CellProgram
+from repro.models import recsys as R
+from repro.sharding import specs as S
+
+FAMILY = "recsys"
+ARCH = "bst"
+
+VOCABS = (4000000, 1000000, 100000, 1000)   # items, users, shops, cates
+
+
+def full_config() -> R.BSTConfig:
+    return R.BSTConfig(
+        name=ARCH, embed=R.EmbeddingSpec(VOCABS, 32), seq_len=20,
+        n_heads=8, n_blocks=1, mlp=(1024, 512, 256))
+
+
+def reduced_config() -> R.BSTConfig:
+    return R.BSTConfig(
+        name=ARCH + "-smoke", embed=R.EmbeddingSpec((512, 128), 16),
+        seq_len=8, n_heads=4, n_blocks=1, mlp=(32, 16))
+
+
+def shapes():
+    return C.SHAPES
+
+
+def _param_specs(params, mesh):
+    def rule(path, leaf):
+        if "table" in path:
+            return P("model", None)
+        if leaf.ndim == 2 and leaf.shape[0] % mesh.shape["model"] == 0 \
+                and leaf.shape[0] >= 256:
+            return P("model", None)
+        return P()
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: rule(jax.tree_util.keystr(p), l), params)
+
+
+def _flops(cfg: R.BSTConfig, batch: int) -> float:
+    d, s = cfg.embed.dim, cfg.seq_len + 1
+    attn = cfg.n_blocks * (4 * d * d * s + 2 * s * s * d * 2
+                           + 8 * d * d * s)
+    mlps = C.mlp_params(((s) * d,) + cfg.mlp + (1,))
+    return 6.0 * batch * (attn + mlps)
+
+
+def cell(shape_name, mesh) -> CellProgram:
+    cfg = full_config()
+    params = jax.eval_shape(lambda k: R.bst_init(k, cfg),
+                            jax.random.PRNGKey(0))
+    pspecs = _param_specs(params, mesh)
+    b = S.batch_axes(mesh)
+    shp = C.SHAPES[shape_name]
+
+    def fwd(p, hist, tgt):
+        return R.bst_forward(p, cfg, hist, tgt)
+
+    if shape_name == "train_batch":
+        bt = shp["batch"]
+
+        def loss_of(p, hist, tgt, labels):
+            return R.bce_loss(fwd(p, hist, tgt), labels)
+
+        return C.make_train_cell(
+            ARCH, params, pspecs, mesh, loss_of,
+            (C.sds((bt, cfg.seq_len), jnp.int32), C.sds((bt,), jnp.int32),
+             C.sds((bt,), jnp.float32)),
+            (P(b, None), P(b), P(b)), _flops(cfg, bt) * 3)
+
+    bt = shp["n_candidates"] if shape_name == "retrieval_cand" \
+        else shp["batch"]
+    return C.make_serve_cell(
+        ARCH, shape_name, params, pspecs, fwd,
+        (C.sds((bt, cfg.seq_len), jnp.int32), C.sds((bt,), jnp.int32)),
+        (P(b, None), P(b)), _flops(cfg, bt), out_specs=P(b))
+
+
+def smoke(key=None):
+    key = key if key is not None else jax.random.PRNGKey(0)
+    cfg = reduced_config()
+    p = R.bst_init(key, cfg)
+    hist = jax.random.randint(key, (16, cfg.seq_len), 0, 512)
+    tgt = jax.random.randint(key, (16,), 0, 512)
+    labels = (jax.random.uniform(key, (16,)) < 0.3).astype(jnp.float32)
+    logits = R.bst_forward(p, cfg, hist, tgt)
+    loss = R.bce_loss(logits, labels)
+    return {"logits": logits, "loss": loss}

@@ -1,0 +1,102 @@
+"""dcn-v2  [recsys] 13 dense / 26 sparse, embed_dim=16, 3 cross layers,
+mlp=1024-1024-512  (Criteo Kaggle cardinalities)  [arXiv:2008.13535]"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import recsys_common as C
+from repro.configs.base import CellProgram
+from repro.models import recsys as R
+from repro.sharding import specs as S
+
+FAMILY = "recsys"
+ARCH = "dcn-v2"
+
+CRITEO_KAGGLE_VOCABS = (
+    1460, 583, 10131227, 2202608, 305, 24, 12517, 633, 3, 93145, 5683,
+    8351593, 3194, 27, 14992, 5461306, 10, 5652, 2173, 4, 7046547, 18,
+    15, 286181, 105, 142572)
+
+
+def full_config() -> R.DCNConfig:
+    return R.DCNConfig(
+        name=ARCH, n_dense=13,
+        embed=R.EmbeddingSpec(CRITEO_KAGGLE_VOCABS, 16),
+        n_cross=3, mlp=(1024, 1024, 512))
+
+
+def reduced_config() -> R.DCNConfig:
+    return R.DCNConfig(
+        name=ARCH + "-smoke", n_dense=13,
+        embed=R.EmbeddingSpec(tuple([32] * 26), 8),
+        n_cross=2, mlp=(32, 16))
+
+
+def shapes():
+    return C.SHAPES
+
+
+def _param_specs(params, mesh):
+    def rule(path, leaf):
+        if "table" in path:
+            return P(("data", "model") if "pod" not in mesh.axis_names
+                     else ("pod", "data", "model"), None)
+        if leaf.ndim == 2 and leaf.shape[0] % mesh.shape["model"] == 0 \
+                and leaf.shape[0] >= 256:
+            return P("model", None)
+        return P()
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: rule(jax.tree_util.keystr(p), l), params)
+
+
+def _flops(cfg: R.DCNConfig, batch: int) -> float:
+    d0 = cfg.n_dense + len(cfg.embed.vocab_sizes) * cfg.embed.dim
+    cross = cfg.n_cross * d0 * d0 * 2
+    mlps = C.mlp_params((d0,) + cfg.mlp) + cfg.mlp[-1]
+    return 6.0 * batch * (cross + mlps)
+
+
+def cell(shape_name, mesh) -> CellProgram:
+    cfg = full_config()
+    params = jax.eval_shape(lambda k: R.dcn_init(k, cfg),
+                            jax.random.PRNGKey(0))
+    pspecs = _param_specs(params, mesh)
+    b = S.batch_axes(mesh)
+    shp = C.SHAPES[shape_name]
+
+    def fwd(p, dense, sp_ids):
+        return R.dcn_forward(p, cfg, dense, sp_ids)
+
+    if shape_name == "train_batch":
+        bt = shp["batch"]
+
+        def loss_of(p, dense, sp_ids, labels):
+            return R.bce_loss(fwd(p, dense, sp_ids), labels)
+
+        return C.make_train_cell(
+            ARCH, params, pspecs, mesh, loss_of,
+            (C.sds((bt, 13), jnp.float32), C.sds((bt, 26), jnp.int32),
+             C.sds((bt,), jnp.float32)),
+            (P(b, None), P(b, None), P(b)), _flops(cfg, bt) * 3)
+
+    bt = shp["n_candidates"] if shape_name == "retrieval_cand" \
+        else shp["batch"]
+    return C.make_serve_cell(
+        ARCH, shape_name, params, pspecs, fwd,
+        (C.sds((bt, 13), jnp.float32), C.sds((bt, 26), jnp.int32)),
+        (P(b, None), P(b, None)), _flops(cfg, bt), out_specs=P(b))
+
+
+def smoke(key=None):
+    key = key if key is not None else jax.random.PRNGKey(0)
+    cfg = reduced_config()
+    p = R.dcn_init(key, cfg)
+    dense = jax.random.normal(key, (16, 13))
+    sp = jax.random.randint(key, (16, 26), 0, 32)
+    labels = (jax.random.uniform(key, (16,)) < 0.3).astype(jnp.float32)
+    logits = R.dcn_forward(p, cfg, dense, sp)
+    loss = R.bce_loss(logits, labels)
+    return {"logits": logits, "loss": loss}

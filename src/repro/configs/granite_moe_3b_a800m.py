@@ -1,0 +1,43 @@
+"""granite-moe-3b-a800m  [moe] 32L d_model=1536 24H (GQA kv=8) d_ff=512
+vocab=49155, MoE 40 experts top-8  [hf:ibm-granite/granite-3.0-1b-a400m]
+
+40 experts do not divide the model axis (16): experts are
+TENSOR-parallel (d_ff split over "model"), not expert-parallel —
+DESIGN.md §4, no padding/waste."""
+
+from repro.configs import lm_common as C
+from repro.models.moe import MoEConfig
+from repro.models.transformer import TransformerConfig
+
+FAMILY = "lm"
+ARCH = "granite-moe-3b-a800m"
+
+
+def full_config() -> TransformerConfig:
+    return TransformerConfig(
+        name=ARCH, n_layers=32, d_model=1536, n_heads=24, n_kv_heads=8,
+        d_ff=512, vocab=49155, act="silu",
+        moe=MoEConfig(n_experts=40, top_k=8, d_model=1536, d_ff=512,
+                      group_size=32768))
+
+
+def reduced_config() -> TransformerConfig:
+    import jax.numpy as jnp
+    return TransformerConfig(
+        name=ARCH + "-smoke", n_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=2, d_ff=32, vocab=512, act="silu", attn_block=32,
+        moe=MoEConfig(n_experts=5, top_k=2, d_model=64, d_ff=32,
+                      group_size=64),
+        dtype=jnp.float32)
+
+
+def shapes():
+    return C.SHAPES
+
+
+def cell(shape_name, mesh):
+    return C.cell(ARCH, full_config(), shape_name, mesh)
+
+
+def smoke(key=None):
+    return C.smoke(reduced_config(), key)

@@ -1,0 +1,35 @@
+"""llama3.2-1b  [dense] 16L d_model=2048 32H (GQA kv=8) d_ff=8192
+vocab=128256  [hf:meta-llama/Llama-3.2-1B]"""
+
+from repro.configs import lm_common as C
+from repro.models.transformer import TransformerConfig
+
+FAMILY = "lm"
+ARCH = "llama3.2-1b"
+
+
+def full_config() -> TransformerConfig:
+    return TransformerConfig(
+        name=ARCH, n_layers=16, d_model=2048, n_heads=32, n_kv_heads=8,
+        d_ff=8192, vocab=128256, act="silu", gated_mlp=True,
+        rope_theta=500000.0)
+
+
+def reduced_config() -> TransformerConfig:
+    import jax.numpy as jnp
+    return TransformerConfig(
+        name=ARCH + "-smoke", n_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=2, d_ff=128, vocab=512, act="silu", gated_mlp=True,
+        attn_block=32, dtype=jnp.float32)
+
+
+def shapes():
+    return C.SHAPES
+
+
+def cell(shape_name, mesh):
+    return C.cell(ARCH, full_config(), shape_name, mesh)
+
+
+def smoke(key=None):
+    return C.smoke(reduced_config(), key)

@@ -1,0 +1,177 @@
+"""Shared cell/smoke machinery for the 5 LM transformer archs.
+
+Shapes (assignment):
+  train_4k     seq 4096   global_batch 256    -> train_step
+  prefill_32k  seq 32768  global_batch 32     -> serve (prefill)
+  decode_32k   seq 32768  global_batch 128    -> serve (1-token decode)
+  long_500k    seq 524288 global_batch 1      -> serve (1-token decode,
+                                                 sequence-sharded cache)
+
+MODEL_FLOPS: train = 6*N*D (N = active params, D = tokens) + attention
+12*B*H*S^2*dh (counted separately since 6ND excludes it); serve decode =
+2*N per token + attention 4*S*H*dh.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import CellProgram
+from repro.models import transformer as T
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.sharding import specs as S
+
+SHAPES = {
+    "train_4k": {"seq_len": 4096, "global_batch": 256, "kind": "train"},
+    "prefill_32k": {"seq_len": 32768, "global_batch": 32, "kind": "serve"},
+    "decode_32k": {"seq_len": 32768, "global_batch": 128, "kind": "serve",
+                   "decode": True},
+    "long_500k": {"seq_len": 524288, "global_batch": 1, "kind": "serve",
+                  "decode": True},
+}
+
+_OPT = AdamWConfig()
+
+
+def abstract_params(cfg: T.TransformerConfig):
+    return jax.eval_shape(
+        lambda k: T.init_params(k, cfg), jax.random.PRNGKey(0))
+
+
+def abstract_opt(params_shape):
+    return jax.eval_shape(adamw_init, params_shape)
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def make_train_fn(cfg: T.TransformerConfig):
+    def train_step(params, opt_state, tokens, targets):
+        def loss(p):
+            return T.loss_fn(p, cfg, tokens, targets)
+        l, grads = jax.value_and_grad(loss)(params)
+        params, opt_state, metrics = adamw_update(
+            params, grads, opt_state, _OPT)
+        return params, opt_state, l
+    return train_step
+
+
+def make_prefill_fn(cfg: T.TransformerConfig):
+    def serve_prefill(params, tokens):
+        return T.prefill(params, cfg, tokens)
+    return serve_prefill
+
+
+def make_decode_fn(cfg: T.TransformerConfig):
+    def serve_decode(params, cache, token):
+        return T.decode_step(params, cfg, cache, token)
+    return serve_decode
+
+
+def model_flops(cfg: T.TransformerConfig, shape: dict) -> float:
+    s, b = shape["seq_len"], shape["global_batch"]
+    n_act = cfg.n_active_params
+    dh, hq = cfg.head_dim, cfg.n_heads
+    if shape["kind"] == "train":
+        tokens = s * b
+        dense = 6.0 * n_act * tokens
+        attn = 12.0 * b * hq * s * s * dh * cfg.n_layers  # fwd+bwd qk+av
+        return dense + attn
+    if shape.get("decode"):
+        # decode: 2N per token + 4*S*H*dh attention per token
+        return (2.0 * n_act + 4.0 * s * hq * dh * cfg.n_layers) * b
+    # prefill: fwd-only
+    tokens = s * b
+    return 2.0 * n_act * tokens + 4.0 * b * hq * s * s * dh * cfg.n_layers
+
+
+def _with_ctx(fn, mesh, **flags):
+    """Trace ``fn`` under the mesh context so model-level
+    with_sharding_constraint anchors resolve (DESIGN.md §5)."""
+    def wrapped(*args):
+        with S.mesh_context(mesh, **flags):
+            return fn(*args)
+    return wrapped
+
+
+def cell(arch: str, cfg: T.TransformerConfig, shape_name: str, mesh
+         ) -> CellProgram:
+    shp = SHAPES[shape_name]
+    b, s = shp["global_batch"], shp["seq_len"]
+    params = abstract_params(cfg)
+    pspecs = S.transformer_param_specs(params, cfg, mesh)
+    baxes = S.batch_axes(mesh)
+    flags = {}
+    if cfg.moe is not None:
+        flags["moe_ep"] = cfg.moe.n_experts % mesh.shape["model"] == 0
+    if shape_name == "long_500k":
+        flags["long_context"] = True
+
+    if shape_name == "train_4k":
+        opt = abstract_opt(params)
+        ospecs = {"m": pspecs, "v": pspecs, "step": P()}
+        fn = _with_ctx(make_train_fn(cfg), mesh, **flags)
+        inputs = (params, opt,
+                  _sds((b, s), jnp.int32), _sds((b, s), jnp.int32))
+        in_specs = (pspecs, ospecs, P(baxes, None), P(baxes, None))
+        return CellProgram(arch, shape_name, "train", fn, inputs, in_specs,
+                           out_specs=(pspecs, ospecs, P()),
+                           donate=(0, 1),
+                           model_flops_per_step=model_flops(cfg, shp))
+
+    if shape_name == "prefill_32k":
+        fn = _with_ctx(make_prefill_fn(cfg), mesh, **flags)
+        inputs = (params, _sds((b, s), jnp.int32))
+        cache_specs = S.transformer_cache_specs(mesh, long_context=False)
+        kv = cache_specs["k"]
+        in_specs = (pspecs, P(baxes, None))
+        out_specs = (P(baxes, "model"),
+                     {"k": kv, "v": kv, "len": P()})
+        return CellProgram(arch, shape_name, "serve", fn, inputs, in_specs,
+                           out_specs=out_specs,
+                           model_flops_per_step=model_flops(cfg, shp))
+
+    # decode cells
+    long = shape_name == "long_500k"
+    cache_specs = S.transformer_cache_specs(mesh, long_context=long)
+    cache = {
+        "k": _sds((cfg.n_layers, b, s, cfg.n_kv_heads, cfg.head_dim),
+                  cfg.dtype),
+        "v": _sds((cfg.n_layers, b, s, cfg.n_kv_heads, cfg.head_dim),
+                  cfg.dtype),
+        "len": _sds((), jnp.int32),
+    }
+    fn = _with_ctx(make_decode_fn(cfg), mesh, **flags)
+    inputs = (params, cache, _sds((b,), jnp.int32))
+    tok_spec = P() if long else P(baxes)
+    in_specs = (pspecs, cache_specs, tok_spec)
+    out_specs = (P(None if long else baxes, "model"), cache_specs)
+    return CellProgram(arch, shape_name, "serve", fn, inputs, in_specs,
+                       out_specs=out_specs,
+                       model_flops_per_step=model_flops(cfg, shp))
+
+
+# ---------------------------------------------------------------------------
+# smoke machinery
+# ---------------------------------------------------------------------------
+
+def smoke(cfg_reduced: T.TransformerConfig, key=None):
+    """One reduced train step + prefill + decode on CPU; returns dict of
+    outputs for assertions."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    p = T.init_params(key, cfg_reduced)
+    b, s = 2, 64
+    toks = jax.random.randint(key, (b, s), 0, cfg_reduced.vocab)
+    fn = make_train_fn(cfg_reduced)
+    opt = adamw_init(p)
+    p2, opt2, loss = jax.jit(fn)(p, opt, toks, toks)
+    logits, cache = jax.jit(make_prefill_fn(cfg_reduced))(p, toks)
+    dec_logits, cache2 = jax.jit(make_decode_fn(cfg_reduced))(
+        p, cache, jnp.zeros((b,), jnp.int32))
+    return {"loss": loss, "logits": logits, "dec_logits": dec_logits,
+            "cache_len": cache2["len"]}

@@ -1,0 +1,35 @@
+"""nemotron-4-340b  [dense] 96L d_model=18432 96H (GQA kv=8) d_ff=73728
+vocab=256000, squared-ReLU, no gate  [arXiv:2402.16819]"""
+
+from repro.configs import lm_common as C
+from repro.models.transformer import TransformerConfig
+
+FAMILY = "lm"
+ARCH = "nemotron-4-340b"
+
+
+def full_config() -> TransformerConfig:
+    return TransformerConfig(
+        name=ARCH, n_layers=96, d_model=18432, n_heads=96, n_kv_heads=8,
+        d_ff=73728, vocab=256000, act="squared_relu", gated_mlp=False,
+        rope_theta=10000.0)
+
+
+def reduced_config() -> TransformerConfig:
+    import jax.numpy as jnp
+    return TransformerConfig(
+        name=ARCH + "-smoke", n_layers=2, d_model=96, n_heads=6,
+        n_kv_heads=2, d_ff=192, vocab=512, act="squared_relu",
+        gated_mlp=False, attn_block=32, dtype=jnp.float32)
+
+
+def shapes():
+    return C.SHAPES
+
+
+def cell(shape_name, mesh):
+    return C.cell(ARCH, full_config(), shape_name, mesh)
+
+
+def smoke(key=None):
+    return C.smoke(reduced_config(), key)

@@ -1,0 +1,43 @@
+"""qwen3-moe-235b-a22b  [moe] 94L d_model=4096 64H (GQA kv=4) d_ff=1536
+vocab=151936, MoE 128 experts top-8  [hf:Qwen/Qwen3-30B-A3B]
+
+128 experts divide the model axis (16): EXPERT-parallel, 8 experts per
+shard (DESIGN.md §4)."""
+
+from repro.configs import lm_common as C
+from repro.models.moe import MoEConfig
+from repro.models.transformer import TransformerConfig
+
+FAMILY = "lm"
+ARCH = "qwen3-moe-235b-a22b"
+
+
+def full_config() -> TransformerConfig:
+    return TransformerConfig(
+        name=ARCH, n_layers=94, d_model=4096, n_heads=64, n_kv_heads=4,
+        d_ff=1536, vocab=151936, act="silu", d_head=128,
+        moe=MoEConfig(n_experts=128, top_k=8, d_model=4096, d_ff=1536,
+                      group_size=32768),
+        rope_theta=1000000.0)
+
+
+def reduced_config() -> TransformerConfig:
+    import jax.numpy as jnp
+    return TransformerConfig(
+        name=ARCH + "-smoke", n_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=2, d_ff=32, vocab=512, act="silu", attn_block=32,
+        moe=MoEConfig(n_experts=8, top_k=2, d_model=64, d_ff=32,
+                      group_size=64),
+        dtype=jnp.float32)
+
+
+def shapes():
+    return C.SHAPES
+
+
+def cell(shape_name, mesh):
+    return C.cell(ARCH, full_config(), shape_name, mesh)
+
+
+def smoke(key=None):
+    return C.smoke(reduced_config(), key)

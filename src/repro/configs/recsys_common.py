@@ -1,0 +1,66 @@
+"""Shared cell/smoke machinery for the 4 recsys archs.
+
+Shapes (assignment):
+  train_batch     batch=65,536      -> train_step (BCE / sampled softmax)
+  serve_p99       batch=512         -> forward
+  serve_bulk      batch=262,144     -> forward
+  retrieval_cand  batch=1, n_candidates=1,000,000
+                  -> two-tower: dot-scoring + top-k (the paper's workload)
+                  -> CTR models: batched forward over all candidates
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import CellProgram
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.sharding import specs as S
+
+SHAPES = {
+    "train_batch": {"batch": 65536, "kind": "train"},
+    "serve_p99": {"batch": 512, "kind": "serve"},
+    "serve_bulk": {"batch": 262144, "kind": "serve"},
+    "retrieval_cand": {"batch": 1, "n_candidates": 1000000,
+                       "kind": "serve"},
+}
+
+OPT = AdamWConfig()
+
+sds = jax.ShapeDtypeStruct
+
+
+def shapes():
+    return SHAPES
+
+
+def make_train_cell(arch, params, pspecs, mesh, loss_of, batch_inputs,
+                    batch_specs, flops) -> CellProgram:
+    opt = jax.eval_shape(adamw_init, params)
+    ospecs = {"m": pspecs, "v": pspecs, "step": P()}
+
+    def train_step(params, opt_state, *batch):
+        l, g = jax.value_and_grad(lambda p: loss_of(p, *batch))(params)
+        params, opt_state, _ = adamw_update(params, g, opt_state, OPT)
+        return params, opt_state, l
+
+    return CellProgram(
+        arch, "train_batch", "train", train_step,
+        (params, opt) + tuple(batch_inputs),
+        (pspecs, ospecs) + tuple(batch_specs),
+        out_specs=(pspecs, ospecs, P()), donate=(0, 1),
+        model_flops_per_step=flops)
+
+
+def make_serve_cell(arch, shape_name, params, pspecs, fwd, batch_inputs,
+                    batch_specs, flops, out_specs=None) -> CellProgram:
+    return CellProgram(
+        arch, shape_name, "serve", fwd,
+        (params,) + tuple(batch_inputs), (pspecs,) + tuple(batch_specs),
+        out_specs=out_specs, model_flops_per_step=flops)
+
+
+def mlp_params(sizes) -> int:
+    return sum(sizes[i] * sizes[i + 1] for i in range(len(sizes) - 1))

@@ -1,0 +1,126 @@
+"""two-tower-retrieval  [recsys] embed_dim=256, tower_mlp=1024-512-256,
+dot interaction, sampled softmax  [RecSys'19 (YouTube)]
+
+The `retrieval_cand` cell (1 query vs 10^6 candidates) is the PAPER's
+exact workload: candidate embeddings live in the d_cos = sqrt(1-cos)
+space (§5.5, Hilbert-embeddable), so serving can use either the batched
+MXU dot-scan lowered here or the Hilbert-exclusion metric index
+(examples/serve_retrieval.py runs both and checks identical results)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import recsys_common as C
+from repro.configs.base import CellProgram
+from repro.models import recsys as R
+from repro.sharding import specs as S
+
+FAMILY = "recsys"
+ARCH = "two-tower-retrieval"
+
+USER_VOCABS = (10000000, 100000, 10000, 1000, 100, 50, 20, 10)
+ITEM_VOCABS = (1000000, 50000, 1000, 100)
+
+
+def full_config() -> R.TwoTowerConfig:
+    return R.TwoTowerConfig(
+        name=ARCH, embed=R.EmbeddingSpec(USER_VOCABS + ITEM_VOCABS, 256),
+        n_user_feats=len(USER_VOCABS), n_item_feats=len(ITEM_VOCABS),
+        tower_mlp=(1024, 512, 256))
+
+
+def reduced_config() -> R.TwoTowerConfig:
+    return R.TwoTowerConfig(
+        name=ARCH + "-smoke",
+        embed=R.EmbeddingSpec((256, 64, 32, 16, 128, 64), 16),
+        n_user_feats=4, n_item_feats=2, tower_mlp=(32, 16))
+
+
+def shapes():
+    return C.SHAPES
+
+
+def _param_specs(params, mesh):
+    def rule(path, leaf):
+        if "table" in path:
+            return P(("data", "model") if "pod" not in mesh.axis_names
+                     else ("pod", "data", "model"), None)
+        if leaf.ndim == 2 and leaf.shape[0] % mesh.shape["model"] == 0 \
+                and leaf.shape[0] >= 256:
+            return P("model", None)
+        return P()
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: rule(jax.tree_util.keystr(p), l), params)
+
+
+def _flops(cfg: R.TwoTowerConfig, batch: int) -> float:
+    d = cfg.embed.dim
+    user = C.mlp_params((cfg.n_user_feats * d,) + cfg.tower_mlp)
+    item = C.mlp_params((cfg.n_item_feats * d,) + cfg.tower_mlp)
+    return 6.0 * batch * (user + item)
+
+
+def cell(shape_name, mesh) -> CellProgram:
+    cfg = full_config()
+    params = jax.eval_shape(lambda k: R.twotower_init(k, cfg),
+                            jax.random.PRNGKey(0))
+    pspecs = _param_specs(params, mesh)
+    b = S.batch_axes(mesh)
+    shp = C.SHAPES[shape_name]
+    nu, ni = cfg.n_user_feats, cfg.n_item_feats
+
+    if shape_name == "train_batch":
+        bt = shp["batch"]
+
+        def loss_of(p, uids, iids):
+            return R.twotower_loss(p, cfg, uids, iids)
+
+        return C.make_train_cell(
+            ARCH, params, pspecs, mesh, loss_of,
+            (C.sds((bt, nu), jnp.int32), C.sds((bt, ni), jnp.int32)),
+            (P(b, None), P(b, None)), _flops(cfg, bt) * 3
+            + 6.0 * bt * bt * cfg.tower_mlp[-1])
+
+    if shape_name == "retrieval_cand":
+        n = shp["n_candidates"]
+        k = 100
+
+        def fwd(p, uids, cand_vectors):
+            return R.retrieval_scores(p, cfg, uids, cand_vectors, k=k)
+
+        # candidate matrix sharded over all data axes (rows)
+        return C.make_serve_cell(
+            ARCH, shape_name, params, pspecs, fwd,
+            (C.sds((1, nu), jnp.int32),
+             C.sds((n, cfg.tower_mlp[-1]), jnp.float32)),
+            (P(None, None), P(b, None)),
+            _flops(cfg, 1) + 2.0 * n * cfg.tower_mlp[-1],
+            out_specs=(P(), P()))
+
+    bt = shp["batch"]
+
+    def fwd(p, uids, iids):
+        return R.twotower_scores(p, cfg, uids, iids)
+
+    return C.make_serve_cell(
+        ARCH, shape_name, params, pspecs, fwd,
+        (C.sds((bt, nu), jnp.int32), C.sds((bt, ni), jnp.int32)),
+        (P(b, None), P(b, None)),
+        _flops(cfg, bt) + 2.0 * bt * bt * cfg.tower_mlp[-1],
+        out_specs=P(b, None))
+
+
+def smoke(key=None):
+    key = key if key is not None else jax.random.PRNGKey(0)
+    cfg = reduced_config()
+    p = R.twotower_init(key, cfg)
+    uids = jax.random.randint(key, (16, cfg.n_user_feats), 0, 16)
+    iids = jax.random.randint(key, (16, cfg.n_item_feats), 0, 16)
+    loss = R.twotower_loss(p, cfg, uids, iids)
+    cand = jax.random.normal(key, (512, cfg.tower_mlp[-1]))
+    cand = cand / jnp.linalg.norm(cand, axis=-1, keepdims=True)
+    scores, ids = R.retrieval_scores(p, cfg, uids[:1], cand, k=8)
+    return {"loss": loss, "scores": scores, "ids": ids}

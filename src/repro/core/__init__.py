@@ -1,0 +1,19 @@
+"""repro.core — the paper's contribution: Hilbert Exclusion metric search.
+
+Public API:
+  metrics        metric registry with four-point capability flags
+  exclusion      hyperbolic / hilbert / ball exclusion predicates
+  embeddings     Lemma-5 four-point verifiers
+  idim           intrinsic dimensionality + threshold calibration
+  tree           GHT / MHT / DiSAT builders + jittable batched search
+  bruteforce     exact-scan oracle / dense retrieval backend
+  distributed    shard_map forest search
+"""
+
+from repro.core import metrics, exclusion, embeddings, idim  # noqa: F401
+from repro.core import bruteforce, blockdist  # noqa: F401
+from repro.core.tree import (  # noqa: F401
+    build_ght, build_mht, build_disat,
+    search_binary_tree, search_sat, SearchStats,
+    BinaryHyperplaneTree, SATree,
+)

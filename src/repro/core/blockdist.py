@@ -1,0 +1,62 @@
+"""Per-query-lane block distances for batched tree traversal.
+
+``block_distance(name, q, pts)``: q (Q, d), pts (Q, L, d) -> (Q, L)
+distances from each query lane to its own gathered block of L points.
+``one_distance(name, q, v)``: q (Q, d), v (Q, d) -> (Q,).
+
+These are the traversal-side mirrors of repro.core.metrics; they avoid
+the full (Q, N) pairwise form because each lane gathers different rows.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+_EPS = 1e-12
+
+
+def _h(x: Array) -> Array:
+    safe = jnp.where(x > _EPS, x, 1.0)
+    return jnp.where(x > _EPS, -safe * jnp.log2(safe), 0.0)
+
+
+def block_distance(name: str, q: Array, pts: Array) -> Array:
+    """q: (Q, d), pts: (Q, L, d) -> (Q, L)."""
+    if name in ("euclidean", "sqeuclidean"):
+        qq = jnp.sum(q * q, -1)[:, None]
+        pp = jnp.sum(pts * pts, -1)
+        qp = jnp.einsum("qd,qld->ql", q, pts)
+        d2 = jnp.maximum(qq + pp - 2.0 * qp, 0.0)
+        return d2 if name == "sqeuclidean" else jnp.sqrt(d2)
+    if name in ("cosine", "angular"):
+        qn = q / jnp.maximum(jnp.linalg.norm(q, axis=-1, keepdims=True), _EPS)
+        pn = pts / jnp.maximum(
+            jnp.linalg.norm(pts, axis=-1, keepdims=True), _EPS)
+        sim = jnp.clip(jnp.einsum("qd,qld->ql", qn, pn), -1.0, 1.0)
+        if name == "angular":
+            return jnp.arccos(sim) / jnp.pi
+        return jnp.sqrt(jnp.maximum(1.0 - sim, 0.0))
+    if name == "jsd":
+        hq = jnp.sum(_h(q), -1)[:, None]
+        hp = jnp.sum(_h(pts), -1)
+        hqp = jnp.sum(_h(q[:, None, :] + pts), -1)
+        return jnp.sqrt(jnp.maximum(1.0 - 0.5 * (hq + hp - hqp), 0.0))
+    if name == "triangular":
+        diff2 = (q[:, None, :] - pts) ** 2
+        den = q[:, None, :] + pts
+        terms = jnp.where(den > _EPS, diff2 / jnp.maximum(den, _EPS), 0.0)
+        return jnp.sqrt(jnp.maximum(jnp.sum(terms, -1), 0.0))
+    if name == "manhattan":
+        return jnp.sum(jnp.abs(q[:, None, :] - pts), -1)
+    if name == "sqrt_manhattan":
+        return jnp.sqrt(jnp.sum(jnp.abs(q[:, None, :] - pts), -1))
+    if name == "chebyshev":
+        return jnp.max(jnp.abs(q[:, None, :] - pts), -1)
+    raise KeyError(name)
+
+
+def one_distance(name: str, q: Array, v: Array) -> Array:
+    """q: (Q, d), v: (Q, d) -> (Q,)."""
+    return block_distance(name, q, v[:, None, :])[:, 0]

@@ -1,0 +1,84 @@
+"""Exact brute-force scan — correctness oracle and the dense-retrieval
+backend (recsys ``retrieval_cand`` path).
+
+Dispatches to the Pallas pairwise kernels for MXU-friendly metrics when
+``use_kernels=True`` (interpret mode on CPU); otherwise pure jnp blocks.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import metrics as metrics_lib
+
+Array = jnp.ndarray
+
+
+@functools.partial(jax.jit, static_argnames=("metric_name", "block"))
+def _range_counts(data: Array, queries: Array, t: Array, *,
+                  metric_name: str, block: int) -> tuple[Array, Array]:
+    """(counts (Q,), n_dist (Q,)) of exact range search via blocked scan."""
+    metric = metrics_lib.get(metric_name)
+    nq = queries.shape[0]
+    n = data.shape[0]
+    t = jnp.broadcast_to(jnp.asarray(t, jnp.float32), (nq,))
+    nblk = (n + block - 1) // block
+    pad = nblk * block - n
+    dpad = jnp.pad(data, ((0, pad), (0, 0)))
+    dblk = dpad.reshape(nblk, block, -1)
+    valid = (jnp.arange(nblk * block) < n).reshape(nblk, block)
+
+    def scan_body(cnt, xs):
+        blk, vmask = xs
+        d = metric.pairwise(queries, blk)            # (Q, block)
+        hits = (d <= t[:, None]) & vmask[None, :]
+        return cnt + jnp.sum(hits, axis=1, dtype=jnp.int32), None
+
+    cnt, _ = jax.lax.scan(scan_body, jnp.zeros((nq,), jnp.int32),
+                          (dblk, valid))
+    return cnt, jnp.full((nq,), n, jnp.int32)
+
+
+def range_search(data, queries, t, *, metric_name: str,
+                 block: int = 8192) -> tuple[np.ndarray, list[set[int]]]:
+    """Exact range search. Returns (counts, per-query id sets).
+
+    The id sets are produced host-side from a (Q, n) boolean — intended
+    for test-sized n. For large n use ``range_counts``.
+    """
+    metric = metrics_lib.get(metric_name)
+    data = jnp.asarray(data, jnp.float32)
+    queries = jnp.asarray(queries, jnp.float32)
+    nq = queries.shape[0]
+    t_arr = jnp.broadcast_to(jnp.asarray(t, jnp.float32), (nq,))
+    hits_np = []
+    n = data.shape[0]
+    for s in range(0, n, block):
+        d = metric.pairwise(queries, data[s:s + block])
+        hits_np.append(np.asarray(d <= t_arr[:, None]))
+    hits = np.concatenate(hits_np, axis=1)
+    sets = [set(np.nonzero(hits[i])[0].tolist()) for i in range(nq)]
+    return hits.sum(axis=1), sets
+
+
+def range_counts(data, queries, t, *, metric_name: str,
+                 block: int = 8192) -> np.ndarray:
+    cnt, _ = _range_counts(jnp.asarray(data, jnp.float32),
+                           jnp.asarray(queries, jnp.float32), t,
+                           metric_name=metric_name, block=block)
+    return np.asarray(cnt)
+
+
+@functools.partial(jax.jit, static_argnames=("metric_name", "k"))
+def knn(data: Array, queries: Array, *, metric_name: str,
+        k: int) -> tuple[Array, Array]:
+    """Exact k-NN: (distances (Q,k), ids (Q,k)). Single pairwise block —
+    used by the retrieval serving path where n fits (10^6 x d)."""
+    metric = metrics_lib.get(metric_name)
+    d = metric.pairwise(queries, data)
+    neg, idx = jax.lax.top_k(-d, k)
+    return -neg, idx

@@ -1,0 +1,140 @@
+"""Distributed metric search: a forest of shard-local trees under
+``shard_map`` (DESIGN.md §2.5).
+
+Scale-out model (matches production vector-search systems):
+  * the dataset is sharded over the ``data`` mesh axis; each shard builds
+    an independent local index (no cross-shard tree edges => no pointer
+    chasing over ICI);
+  * queries are replicated to every shard;
+  * each shard runs the SAME jittable traversal as the single-device
+    engine; per-shard fixed-size result buffers are merged with an
+    all_gather; distance counts are psum-reduced (the global cost).
+
+Shard-local ids are offset into the global id space host-side at build.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.core.tree.build import build_ght, build_mht
+from repro.core.tree.flat import BinaryHyperplaneTree
+from repro.core.tree.search import _search_binary
+
+
+@dataclasses.dataclass
+class ShardedForest:
+    """Per-shard trees stacked on a leading shard axis, device-sharded."""
+    trees: BinaryHyperplaneTree      # every leaf has leading dim = n_shards
+    mesh: Mesh
+    axis: str
+    id_offset: Any                   # (n_shards,) global id offset per shard
+    n_total: int
+
+
+def _pad_tree(tree: BinaryHyperplaneTree, n_nodes: int, n_bucket: int
+              ) -> BinaryHyperplaneTree:
+    """Pad node/bucket arrays so every shard has identical shapes."""
+    def pad1(a, target, fill):
+        a = np.asarray(a)
+        out = np.full((target,) + a.shape[1:], fill, a.dtype)
+        out[:a.shape[0]] = a
+        return out
+    return BinaryHyperplaneTree(
+        data=tree.data, perm=pad1(tree.perm, n_bucket, 0),
+        p1=pad1(tree.p1, n_nodes, -1), p2=pad1(tree.p2, n_nodes, -1),
+        d12=pad1(tree.d12, n_nodes, 0.0),
+        p1_inherited=pad1(tree.p1_inherited, n_nodes, 0),
+        cover_r1=pad1(tree.cover_r1, n_nodes, 0.0),
+        cover_r2=pad1(tree.cover_r2, n_nodes, 0.0),
+        left=pad1(tree.left, n_nodes, -1),
+        right=pad1(tree.right, n_nodes, -1),
+        leaf_start=pad1(tree.leaf_start, n_nodes, 0),
+        leaf_count=pad1(tree.leaf_count, n_nodes, 0),
+    )
+
+
+def build_forest(data: np.ndarray, metric_name: str, mesh: Mesh,
+                 axis: str = "data", *, kind: str = "mht",
+                 leaf_size: int = 32, seed: int = 0) -> ShardedForest:
+    """Shard ``data`` over ``axis`` of ``mesh`` and build one local tree
+    per shard (host-side), then device-put the stacked forest sharded on
+    its leading axis."""
+    n_shards = mesh.shape[axis]
+    n = data.shape[0]
+    per = (n + n_shards - 1) // n_shards
+    builder = {"ght": build_ght, "mht": build_mht}[kind]
+    trees, offsets = [], []
+    for s in range(n_shards):
+        lo, hi = s * per, min((s + 1) * per, n)
+        shard_pts = data[lo:hi]
+        if shard_pts.shape[0] == 0:
+            shard_pts = data[:1]
+            lo = 0
+        trees.append(builder(shard_pts, metric_name,
+                             leaf_size=leaf_size, seed=seed + s))
+        offsets.append(lo)
+    n_nodes = max(t.p1.shape[0] for t in trees)
+    n_bucket = max(t.perm.shape[0] for t in trees)
+    n_pts = max(t.data.shape[0] for t in trees)
+    padded = []
+    for t in trees:
+        t = _pad_tree(t, n_nodes, n_bucket)
+        dpad = np.zeros((n_pts, t.data.shape[1]), np.float32)
+        dpad[:t.data.shape[0]] = t.data
+        t = dataclasses.replace(t, data=dpad)
+        padded.append(t)
+    stacked = jax.tree_util.tree_map(
+        lambda *xs: np.stack(xs, axis=0), *padded)
+    sharding = NamedSharding(mesh, P(axis))
+    stacked = jax.tree_util.tree_map(
+        lambda x: jax.device_put(x, sharding), stacked)
+    return ShardedForest(trees=stacked, mesh=mesh, axis=axis,
+                         id_offset=jax.device_put(
+                             jnp.asarray(offsets, jnp.int32)[:, None],
+                             sharding),
+                         n_total=n)
+
+
+def forest_search(forest: ShardedForest, queries, t, *, metric_name: str,
+                  mechanism: str = "hilbert", r_cap: int = 64,
+                  stack_cap: int = 128):
+    """Replicated-query forest search.
+
+    Returns (res_ids (Q, n_shards*r_cap) global ids, res_cnt (Q,),
+    n_dist (Q,) summed over shards).
+    """
+    mesh, axis = forest.mesh, forest.axis
+    leaf_cap = int(np.max(np.asarray(forest.trees.leaf_count)))
+    queries = jnp.asarray(queries, jnp.float32)
+    tq = jnp.broadcast_to(jnp.asarray(t, jnp.float32), (queries.shape[0],))
+
+    tree_specs = jax.tree_util.tree_map(lambda _: P(axis), forest.trees)
+
+    @partial(shard_map, mesh=mesh,
+             in_specs=(tree_specs, P(axis), P(), P()),
+             out_specs=(P(None, axis), P(), P()),
+             check_rep=False)
+    def _run(tree, id_off, q, tt):
+        # leading shard axis has local length 1 inside the map
+        tree = jax.tree_util.tree_map(lambda x: x[0], tree)
+        stats = _search_binary(
+            tree, q, tt, metric_name=metric_name, mechanism=mechanism,
+            r_cap=r_cap, stack_cap=stack_cap, leaf_cap=max(leaf_cap, 1),
+            use_cover_radius=True)
+        valid = stats.res_ids >= 0
+        gids = jnp.where(valid, stats.res_ids + id_off[0, 0], -1)
+        cnt = jax.lax.psum(stats.res_cnt, axis)
+        nd = jax.lax.psum(stats.n_dist, axis)
+        return gids, cnt, nd
+
+    gids, cnt, nd = _run(forest.trees, forest.id_offset, queries, tq)
+    return gids, cnt, nd

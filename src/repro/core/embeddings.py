@@ -1,0 +1,96 @@
+"""Finite isometric embedding verifiers (paper §2.2, §5, Lemma 5).
+
+Production role: before enabling Hilbert Exclusion for a *user-supplied*
+metric, the framework can empirically screen random quadruples with the
+Lemma-5 test.  A single failing quadruple proves the space is NOT
+4-embeddable (and Hilbert Exclusion would be unsound); passing many
+quadruples is strong statistical evidence (soundness for our built-in
+metrics is analytic, per the paper).
+
+Lemma 5 (Blumenthal): (X,d) is isometrically 4-embeddable in l2^3 iff for
+every 4 points and all c with sum(c)=0:  sum_ij c_i c_j d(x_i,x_j)^2 <= 0,
+i.e. the squared-distance matrix D2 is conditionally negative semidefinite
+(CNSD) on the hyperplane sum(c)=0.
+
+Equivalent operational test: let P project onto {c : sum c = 0}; then
+D2 is CNSD iff the symmetric matrix -P D2 P is PSD. For 4x4 this is three
+eigenvalues >= 0 (one is always ~0 along the excluded direction).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+
+def cnsd_defect(d2: Array, *, tol_scale: float = 1e-5) -> Array:
+    """Largest violation of conditional negative semidefiniteness.
+
+    d2: (..., k, k) matrix of SQUARED distances among k points.
+    Returns (...,) defect >= 0; a value ~0 (within tol) means the quadruple
+    passes the Lemma-5 test.  Defect = max eigenvalue of P(-D2)P negated...
+
+    Concretely we compute  lambda_max( P @ D2 @ P )  where
+    P = I - 11^T/k; CNSD  <=>  that value <= 0 (up to fp noise).
+    """
+    k = d2.shape[-1]
+    eye = jnp.eye(k, dtype=d2.dtype)
+    p = eye - jnp.full((k, k), 1.0 / k, dtype=d2.dtype)
+    m = p @ d2 @ p
+    m = 0.5 * (m + jnp.swapaxes(m, -1, -2))
+    eig = jnp.linalg.eigvalsh(m)
+    scale = jnp.maximum(jnp.max(jnp.abs(d2), axis=(-2, -1)), 1.0)
+    del tol_scale  # caller applies tolerance; we return the raw defect
+    return jnp.max(eig, axis=-1) / scale
+
+
+def is_four_embeddable_quadruple(d2: Array, tol: float = 1e-5) -> Array:
+    """Boolean Lemma-5 verdict for (..., 4, 4) squared-distance matrices."""
+    return cnsd_defect(d2) <= tol
+
+
+def quadruple_distance_matrix(metric, pts: Array) -> Array:
+    """pts: (..., 4, d) -> (..., 4, 4) squared distances under ``metric``."""
+    def one(p):
+        d = metric.pairwise(p, p)
+        return d * d
+    flat = pts.reshape((-1,) + pts.shape[-2:])
+    out = jax.vmap(one)(flat)
+    return out.reshape(pts.shape[:-2] + (4, 4))
+
+
+def screen_metric(metric, sample: Array, n_quadruples: int, key,
+                  tol: float = 1e-5) -> tuple[Array, Array]:
+    """Empirical four-point screen: draw random quadruples from ``sample``
+    (n, d) and test each.  Returns (fraction_passing, worst_defect).
+
+    fraction < 1 ==> metric certainly lacks the property (Hilbert Exclusion
+    unsound).  fraction == 1 is evidence (not proof) it holds.
+    """
+    n = sample.shape[0]
+    idx = jax.random.randint(key, (n_quadruples, 4), 0, n)
+    pts = sample[idx]                       # (Q, 4, d)
+    d2 = quadruple_distance_matrix(metric, pts)
+    defect = cnsd_defect(d2)
+    ok = defect <= tol
+    return jnp.mean(ok.astype(jnp.float32)), jnp.max(defect)
+
+
+def embed_quadruple_l2(d2: Array) -> Array:
+    """Constructive 4-embedding: return (4, 3) coordinates whose pairwise
+    squared distances reproduce ``d2`` (4x4), when it is CNSD.
+
+    Classical MDS: G = -1/2 P D2 P is PSD Gram; factor via eigh. Raises no
+    error on non-embeddable input — caller should check cnsd_defect first
+    (negative eigenvalues are clipped, distorting distances).
+    """
+    k = d2.shape[-1]
+    p = jnp.eye(k, dtype=d2.dtype) - 1.0 / k
+    g = -0.5 * (p @ d2 @ p)
+    g = 0.5 * (g + g.T)
+    w, v = jnp.linalg.eigh(g)
+    w = jnp.maximum(w, 0.0)
+    coords = v * jnp.sqrt(w)[None, :]
+    return coords[:, -3:]                   # top-3 eigendirections suffice

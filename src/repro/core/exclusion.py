@@ -1,0 +1,124 @@
+"""Exclusion predicates — the paper's contribution, as composable jnp ops.
+
+All predicates answer: *given what we know about a query q, can an entire
+region be excluded from the search?*  They are exact (never exclude a true
+result) under their stated premises.
+
+Hyperplane-partition setting (GHT/MHT/DiSAT): a node splits its points
+into S_p1 = {s : d(s,p1) < d(s,p2)} and S_p2 = complement.  With
+d1 = d(q,p1), d2 = d(q,p2), d12 = d(p1,p2), threshold t:
+
+  hyperbolic  (any metric space; 3-embeddability in l2^2):
+      (d1 - d2)/2 > t            =>  no solution in S_p1
+  hilbert     (requires the four-point property; Theorems 1+2):
+      (d1^2 - d2^2)/(2 d12) > t  =>  no solution in S_p1
+
+Hilbert is strictly weaker (Appendix A: (a^2-b^2)/2c >= (a-b)/2 whenever
+c <= a+b), so it excludes a superset of what hyperbolic excludes.
+
+Ball/pivot setting: region R has cover radius r around pivot p; with
+dp = d(q,p): exclude R iff dp > r + t (outside) or dp < r_low - t (inside
+ring exclusion). These depend only on triangle inequality.
+
+Sign convention: all functions return True where the region MAY BE
+EXCLUDED. Batched over any leading shape.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+_EPS = 1e-12
+
+
+# ---------------------------------------------------------------------------
+# hyperplane-partition exclusions
+# ---------------------------------------------------------------------------
+
+def hyperbolic_margin(d1: Array, d2: Array, d12: Array) -> Array:
+    """Signed lower bound on d(s,·) separation: (d1-d2)/2.
+
+    > t  =>  exclude the p1 side.  (d12 unused; kept for uniform signature.)
+    """
+    del d12
+    return (d1 - d2) * 0.5
+
+
+def hilbert_margin(d1: Array, d2: Array, d12: Array) -> Array:
+    """Signed distance from (embedded) q to the bisector hyperplane of
+    p1,p2: (d1^2 - d2^2) / (2 d12).   > t  =>  exclude the p1 side.
+
+    Valid only when the metric has the four-point property (Theorem 2).
+
+    d12 ~ 0 means the two pivots coincide and the bisector hyperplane is
+    undefined: the margin is forced to 0 so NO exclusion can fire.  (This
+    also defuses an XLA fusion hazard: for d1 == d2 the numerator is an
+    exact 0 eagerly but an FMA-contracted ~1e-8 inside fused loops, which
+    a ~0 denominator would otherwise amplify past any threshold.)
+    """
+    safe = d12 > 1e-6          # near-duplicate pivots: no usable bisector
+    num = d1 * d1 - d2 * d2
+    return jnp.where(safe, num / (2.0 * jnp.maximum(d12, _EPS)), 0.0)
+
+
+def exclude_p1_side_hyperbolic(d1: Array, d2: Array, d12: Array,
+                               t: Array) -> Array:
+    return hyperbolic_margin(d1, d2, d12) > t
+
+
+def exclude_p1_side_hilbert(d1: Array, d2: Array, d12: Array,
+                            t: Array) -> Array:
+    return hilbert_margin(d1, d2, d12) > t
+
+
+def partition_exclusions(d1: Array, d2: Array, d12: Array, t: Array,
+                         *, use_hilbert: bool) -> tuple[Array, Array]:
+    """(exclude_left, exclude_right) for the S_p1 / S_p2 sides of a node.
+
+    By symmetry the right side uses the margin with d1,d2 swapped.
+    At most one side can be excluded for t >= 0 (margins are negatives of
+    each other).
+    """
+    margin = hilbert_margin if use_hilbert else hyperbolic_margin
+    m = margin(d1, d2, d12)
+    return m > t, (-m) > t
+
+
+# ---------------------------------------------------------------------------
+# ball / pivot exclusions (cover radius) — used by MHT/DiSAT hybrids
+# ---------------------------------------------------------------------------
+
+def exclude_outside_ball(dp: Array, cover_r: Array, t: Array) -> Array:
+    """Region within distance cover_r of pivot; q at dp: exclude iff the
+    query ball cannot reach the cover ball."""
+    return dp > cover_r + t
+
+
+def exclude_inside_ring(dp: Array, inner_r: Array, t: Array) -> Array:
+    """Region entirely OUTSIDE radius inner_r of pivot: exclude iff the
+    query ball lies strictly inside."""
+    return dp < inner_r - t
+
+
+# ---------------------------------------------------------------------------
+# capability gating
+# ---------------------------------------------------------------------------
+
+def margin_fn_for(metric, mechanism: str) -> Callable[[Array, Array, Array], Array]:
+    """Resolve the margin function for a metric, enforcing the four-point
+    requirement for 'hilbert'. mechanism in {'hyperbolic','hilbert'}."""
+    if mechanism == "hyperbolic":
+        return hyperbolic_margin
+    if mechanism == "hilbert":
+        if not metric.four_point_property:
+            raise ValueError(
+                f"metric {metric.name!r} lacks the four-point property; "
+                "Hilbert Exclusion would be UNSOUND (paper §5.7). Use "
+                "'hyperbolic', or an embeddable transform such as "
+                "sqrt_manhattan.")
+        return hilbert_margin
+    raise ValueError(f"unknown mechanism {mechanism!r}")

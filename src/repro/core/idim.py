@@ -1,0 +1,55 @@
+"""Intrinsic dimensionality + threshold calibration (paper §6.1, Table 2).
+
+IDIM = mu^2 / (2 sigma^2) over sampled pairwise distances (Chavez et al.).
+Thresholds t_n are calibrated so a ball query returns ~n results per 10^6
+points — the paper derives them empirically; we use the n/10^6 quantile of
+a query->data distance sample.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+
+def idim_from_distances(d: Array) -> Array:
+    """mu^2 / (2 sigma^2) of a flat sample of distances."""
+    mu = jnp.mean(d)
+    var = jnp.var(d)
+    return (mu * mu) / (2.0 * jnp.maximum(var, 1e-24))
+
+
+def rowwise_distance(metric, a: Array, b: Array) -> Array:
+    """d(a_i, b_i) per row, memory-safe (never forms a pairwise block)."""
+    return jax.vmap(lambda x, y: metric.pairwise(x[None], y[None])[0, 0])(a, b)
+
+
+def sample_distances(metric, data: Array, n_pairs: int, key) -> Array:
+    """Distances between n_pairs random (i, j) index pairs of ``data``."""
+    n = data.shape[0]
+    k1, k2 = jax.random.split(key)
+    i = jax.random.randint(k1, (n_pairs,), 0, n)
+    j = jax.random.randint(k2, (n_pairs,), 0, n)
+    return rowwise_distance(metric, data[i], data[j])
+
+
+def idim(metric, data: Array, key, n_pairs: int = 4096) -> Array:
+    return idim_from_distances(sample_distances(metric, data, n_pairs, key))
+
+
+def calibrate_thresholds(metric, data: Array, queries: Array,
+                         ns=(1, 2, 4, 8, 16, 32),
+                         block: int = 16384) -> dict[int, float]:
+    """Table-2 style {n: t_n}: t_n = the (n/1e6) quantile of the
+    query->data distance distribution, estimated over all q*N pairs,
+    computed in data blocks to bound memory for the simplex metrics.
+    """
+    chunks = []
+    n = data.shape[0]
+    for start in range(0, n, block):
+        chunks.append(metric.pairwise(queries, data[start:start + block])
+                      .reshape(-1))
+    d = jnp.concatenate(chunks)
+    return {k: float(jnp.quantile(d, k / 1e6)) for k in ns}

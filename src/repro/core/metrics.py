@@ -1,0 +1,208 @@
+"""Metric registry for Hilbert-Exclusion search.
+
+Every metric carries a ``four_point_property`` capability flag: True iff the
+space is isometrically 4-embeddable in l2^3 (equivalently, Hilbert-space
+embeddable for the metrics here — paper §5).  Hilbert Exclusion is only
+valid when the flag is True; the search layer enforces this.
+
+All distance functions are pure jnp, batched over leading axes:
+
+  ``pairwise(X, Y)``    -> (n, m) distances between rows of X (n,d), Y (m,d)
+  ``one_to_many(q, X)`` -> (n,)   distances from q (d,) to rows of X (n,d)
+
+Probability-simplex metrics (jsd / triangular) assume inputs are
+nonnegative and row-normalised to sum 1 (paper §6.1 note 6: euc/tri data
+are normalised in the experiments; we expose ``normalise_for``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+_EPS = 1e-12
+
+
+# ---------------------------------------------------------------------------
+# distance kernels (pure jnp; Pallas-accelerated versions live in
+# repro.kernels and are dispatched by repro.core.bruteforce)
+# ---------------------------------------------------------------------------
+
+def _sq_l2_pairwise(x: Array, y: Array) -> Array:
+    """Squared Euclidean via the MXU-friendly expansion |x|^2+|y|^2-2xy."""
+    xx = jnp.sum(x * x, axis=-1)[:, None]
+    yy = jnp.sum(y * y, axis=-1)[None, :]
+    xy = x @ y.T
+    return jnp.maximum(xx + yy - 2.0 * xy, 0.0)
+
+
+def euclidean_pairwise(x: Array, y: Array) -> Array:
+    return jnp.sqrt(_sq_l2_pairwise(x, y))
+
+
+def sqeuclidean_pairwise(x: Array, y: Array) -> Array:
+    return _sq_l2_pairwise(x, y)
+
+
+def _normalise_rows(x: Array) -> Array:
+    return x / jnp.maximum(jnp.linalg.norm(x, axis=-1, keepdims=True), _EPS)
+
+
+def cosine_pairwise(x: Array, y: Array) -> Array:
+    """d_cos(v,w) = sqrt(1 - cos(v,w))  (paper §5.5, Hilbert-embeddable form).
+
+    Equivalent to (1/sqrt(2))·||v/|v| - w/|w|||_2, hence 4-embeddable.
+    """
+    xn = _normalise_rows(x)
+    yn = _normalise_rows(y)
+    sim = jnp.clip(xn @ yn.T, -1.0, 1.0)
+    return jnp.sqrt(jnp.maximum(1.0 - sim, 0.0))
+
+
+def angular_pairwise(x: Array, y: Array) -> Array:
+    """1 - arccos(cos)/(2*pi): rank-equivalent 'Cosine Distance' that the paper
+    notes is a proper metric but NOT Hilbert-embeddable (§5.5). Kept as a
+    negative control for the four-point flag.
+
+    NOTE: we use arccos(cos)/pi (bounded [0,1] and a proper metric on the
+    sphere); the paper's 1 - acos/2pi is not a metric as written (d(x,x)=1)
+    and is presumed a typo. Rank order is unaffected.
+    """
+    xn = _normalise_rows(x)
+    yn = _normalise_rows(y)
+    sim = jnp.clip(xn @ yn.T, -1.0, 1.0)
+    return jnp.arccos(sim) / jnp.pi
+
+
+def _h(x: Array) -> Array:
+    """h(x) = -x log2 x, with h(0) = 0."""
+    safe = jnp.where(x > _EPS, x, 1.0)
+    return jnp.where(x > _EPS, -safe * jnp.log2(safe), 0.0)
+
+
+def jsd_divergence_pairwise(x: Array, y: Array) -> Array:
+    """JSD(v,w) = 1 - 1/2 sum_i (h(v_i)+h(w_i)-h(v_i+w_i))   (paper §5.3).
+
+    Bounded [0,1]. x:(n,d), y:(m,d) -> (n,m). The cross term h(v+w) cannot
+    be factored into a matmul; it is the VPU-bound O(n·m·d) loop that the
+    Pallas kernel tiles.
+    """
+    hx = jnp.sum(_h(x), axis=-1)[:, None]          # (n,1)
+    hy = jnp.sum(_h(y), axis=-1)[None, :]          # (1,m)
+    xpy = x[:, None, :] + y[None, :, :]            # (n,m,d)
+    hxy = jnp.sum(_h(xpy), axis=-1)                # (n,m)
+    return 1.0 - 0.5 * (hx + hy - hxy)
+
+
+def jsd_pairwise(x: Array, y: Array) -> Array:
+    """Jensen-Shannon *distance* = sqrt(JSD) — the proper, Hilbert-embeddable
+    metric (Topsoe / Endres-Schindelin)."""
+    return jnp.sqrt(jnp.maximum(jsd_divergence_pairwise(x, y), 0.0))
+
+
+def triangular_pairwise(x: Array, y: Array) -> Array:
+    """D_tri(v,w) = sqrt( sum_i (v_i-w_i)^2 / (v_i+w_i) )   (paper §5.4)."""
+    diff2 = (x[:, None, :] - y[None, :, :]) ** 2   # (n,m,d)
+    denom = x[:, None, :] + y[None, :, :]
+    terms = jnp.where(denom > _EPS, diff2 / jnp.maximum(denom, _EPS), 0.0)
+    return jnp.sqrt(jnp.maximum(jnp.sum(terms, axis=-1), 0.0))
+
+
+def manhattan_pairwise(x: Array, y: Array) -> Array:
+    """L1 — a proper metric WITHOUT the four-point property (paper §5.7)."""
+    return jnp.sum(jnp.abs(x[:, None, :] - y[None, :, :]), axis=-1)
+
+
+def chebyshev_pairwise(x: Array, y: Array) -> Array:
+    """L-inf — proper metric, not Hilbert embeddable (paper §5.7)."""
+    return jnp.max(jnp.abs(x[:, None, :] - y[None, :, :]), axis=-1)
+
+
+def sqrt_manhattan_pairwise(x: Array, y: Array) -> Array:
+    """sqrt(L1): Blumenthal — (X, d^alpha) with alpha<=1/2 is 4-embeddable
+    (paper §5.7), so THIS form may use Hilbert exclusion (at the price of
+    much higher intrinsic dimensionality)."""
+    return jnp.sqrt(manhattan_pairwise(x, y))
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Metric:
+    """A metric space descriptor.
+
+    four_point_property: True iff isometrically 4-embeddable in l2^3
+        (=> Hilbert Exclusion is sound; Theorem 2).
+    simplex: inputs must be probability vectors (row-normalised, >=0).
+    mxu_friendly: the pairwise form reduces to a matmul (+rank-1 terms).
+    """
+    name: str
+    pairwise: Callable[[Array, Array], Array]
+    four_point_property: bool
+    simplex: bool = False
+    mxu_friendly: bool = False
+
+    def one_to_many(self, q: Array, x: Array) -> Array:
+        return self.pairwise(q[None, :], x)[0]
+
+    def __call__(self, a: Array, b: Array) -> Array:
+        return self.pairwise(a[None, :], b[None, :])[0, 0]
+
+
+_REGISTRY: dict[str, Metric] = {}
+
+
+def register(metric: Metric) -> Metric:
+    if metric.name in _REGISTRY:
+        raise ValueError(f"duplicate metric {metric.name!r}")
+    _REGISTRY[metric.name] = metric
+    return metric
+
+
+euclidean = register(Metric("euclidean", euclidean_pairwise,
+                            four_point_property=True, mxu_friendly=True))
+sqeuclidean = register(Metric("sqeuclidean", sqeuclidean_pairwise,
+                              # d^2 is NOT a metric (no triangle ineq.);
+                              # registered for kernel reuse only.
+                              four_point_property=False, mxu_friendly=True))
+cosine = register(Metric("cosine", cosine_pairwise,
+                         four_point_property=True, mxu_friendly=True))
+angular = register(Metric("angular", angular_pairwise,
+                          four_point_property=False, mxu_friendly=True))
+jsd = register(Metric("jsd", jsd_pairwise,
+                      four_point_property=True, simplex=True))
+triangular = register(Metric("triangular", triangular_pairwise,
+                             four_point_property=True, simplex=True))
+manhattan = register(Metric("manhattan", manhattan_pairwise,
+                            four_point_property=False))
+chebyshev = register(Metric("chebyshev", chebyshev_pairwise,
+                            four_point_property=False))
+sqrt_manhattan = register(Metric("sqrt_manhattan", sqrt_manhattan_pairwise,
+                                 four_point_property=True))
+
+
+def get(name: str) -> Metric:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown metric {name!r}; known: {sorted(_REGISTRY)}") from None
+
+
+def names() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+def normalise_for(metric: Metric, x: Array) -> Array:
+    """Prepare raw nonnegative vectors for a metric (paper §6.1: euc/tri/jsd
+    experiments normalise rows to sum 1 for simplex metrics)."""
+    if metric.simplex:
+        s = jnp.maximum(jnp.sum(x, axis=-1, keepdims=True), _EPS)
+        return x / s
+    return x

@@ -1,0 +1,336 @@
+"""Host-side index builders (numpy, vectorized per node).
+
+Construction-time distances are free at query time (paper footnote 1): we
+precompute pivot-pivot / sibling-sibling distances here and store them in
+the flat containers.  ``data`` stays in ORIGINAL row order; leaf buckets
+are ranges into a ``bucket_ids`` indirection array (named ``perm`` in the
+containers), so search reports original ids directly.
+
+Distance counting convention (matches the paper's cost model): only
+query-to-object distances computed during search are counted; everything
+computed here is amortised build cost.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.tree.flat import BinaryHyperplaneTree, SATree
+
+_EPS = 1e-12
+
+
+def _np_pairwise(metric_name: str, x: np.ndarray, y: np.ndarray) -> np.ndarray:
+    """Numpy mirror of repro.core.metrics pairwise kernels (float64)."""
+    x = np.asarray(x, np.float64)
+    y = np.asarray(y, np.float64)
+    if metric_name in ("euclidean", "sqeuclidean"):
+        xx = np.sum(x * x, -1)[:, None]
+        yy = np.sum(y * y, -1)[None, :]
+        d2 = np.maximum(xx + yy - 2.0 * (x @ y.T), 0.0)
+        return d2 if metric_name == "sqeuclidean" else np.sqrt(d2)
+    if metric_name == "cosine":
+        xn = x / np.maximum(np.linalg.norm(x, axis=-1, keepdims=True), _EPS)
+        yn = y / np.maximum(np.linalg.norm(y, axis=-1, keepdims=True), _EPS)
+        return np.sqrt(np.maximum(1.0 - np.clip(xn @ yn.T, -1, 1), 0.0))
+    if metric_name == "angular":
+        xn = x / np.maximum(np.linalg.norm(x, axis=-1, keepdims=True), _EPS)
+        yn = y / np.maximum(np.linalg.norm(y, axis=-1, keepdims=True), _EPS)
+        return np.arccos(np.clip(xn @ yn.T, -1, 1)) / np.pi
+    if metric_name == "jsd":
+        def h(v):
+            out = np.zeros_like(v)
+            m = v > _EPS
+            out[m] = -v[m] * np.log2(v[m])
+            return out
+        hx = np.sum(h(x), -1)[:, None]
+        hy = np.sum(h(y), -1)[None, :]
+        out = np.empty((x.shape[0], y.shape[0]))
+        step = max(1, int(2**22 // max(1, y.shape[0] * y.shape[1])))
+        for s in range(0, x.shape[0], step):
+            xpy = x[s:s + step, None, :] + y[None, :, :]
+            out[s:s + step] = np.sum(h(xpy), -1)
+        jsdiv = 1.0 - 0.5 * (hx + hy - out)
+        return np.sqrt(np.maximum(jsdiv, 0.0))
+    if metric_name == "triangular":
+        out = np.empty((x.shape[0], y.shape[0]))
+        step = max(1, int(2**22 // max(1, y.shape[0] * y.shape[1])))
+        for s in range(0, x.shape[0], step):
+            diff2 = (x[s:s + step, None, :] - y[None, :, :]) ** 2
+            den = x[s:s + step, None, :] + y[None, :, :]
+            terms = np.where(den > _EPS, diff2 / np.maximum(den, _EPS), 0.0)
+            out[s:s + step] = np.sum(terms, -1)
+        return np.sqrt(np.maximum(out, 0.0))
+    if metric_name == "manhattan":
+        return np.sum(np.abs(x[:, None, :] - y[None, :, :]), -1)
+    if metric_name == "sqrt_manhattan":
+        return np.sqrt(np.sum(np.abs(x[:, None, :] - y[None, :, :]), -1))
+    if metric_name == "chebyshev":
+        return np.max(np.abs(x[:, None, :] - y[None, :, :]), -1)
+    raise KeyError(metric_name)
+
+
+def _one_to_many(metric_name: str, q: np.ndarray, x: np.ndarray) -> np.ndarray:
+    return _np_pairwise(metric_name, q[None, :], x)[0]
+
+
+# ---------------------------------------------------------------------------
+# GHT / MHT
+# ---------------------------------------------------------------------------
+
+class _NodeArrays:
+    """Growable SoA node storage for the binary builders."""
+
+    def __init__(self):
+        self.p1, self.p2, self.d12 = [], [], []
+        self.inh, self.cr1, self.cr2 = [], [], []
+        self.left, self.right = [], []
+        self.ls, self.lc = [], []
+
+    def new(self) -> int:
+        self.p1.append(-1); self.p2.append(-1); self.d12.append(0.0)
+        self.inh.append(0); self.cr1.append(0.0); self.cr2.append(0.0)
+        self.left.append(-1); self.right.append(-1)
+        self.ls.append(0); self.lc.append(0)
+        return len(self.p1) - 1
+
+
+def _build_binary(data: np.ndarray, metric_name: str, *, monotonous: bool,
+                  leaf_size: int, max_depth: int, seed: int
+                  ) -> BinaryHyperplaneTree:
+    """Shared GHT/MHT builder.
+
+    GHT: p1 random, p2 = farthest-from-p1 (fresh per node).
+    MHT: child inherits the parent pivot owning its subset as p1
+    (monotone), selects only p2; search then reuses d(q, p1).
+    """
+    rng = np.random.default_rng(seed)
+    n = data.shape[0]
+    nodes = _NodeArrays()
+    bucket_chunks: list[np.ndarray] = []
+    bucket_pos = 0
+
+    root = nodes.new()
+    # worklist entries: (node, member original-ids, inherited pivot id or -1,
+    #                    depth)
+    work: list[tuple[int, np.ndarray, int, int]] = [
+        (root, np.arange(n, dtype=np.int64), -1, 0)]
+
+    while work:
+        node, idx, inh_pivot, depth = work.pop()
+
+        make_leaf = (idx.size <= leaf_size or depth >= max_depth
+                     or (idx.size < 2 and inh_pivot < 0))
+        if not make_leaf:
+            # --- pivot selection -------------------------------------------
+            # Random pivots (paper §6.2: "randomly select pairs of pivot
+            # points").  Farthest-point p2 looks appealing but collapses
+            # in high dims: nearly every point lands on the p1 side, the
+            # depth cap then forces giant leaves.
+            if monotonous and inh_pivot >= 0:
+                p1 = int(inh_pivot)
+                cand = idx
+                inherited = 1
+            else:
+                p1 = int(idx[rng.integers(idx.size)])
+                cand = idx[idx != p1]
+                inherited = 0
+            d_p1 = _one_to_many(metric_name, data[p1], data[cand])
+            p2_local = int(rng.integers(cand.size))
+            p2 = int(cand[p2_local])
+            rest_mask = np.ones(cand.size, bool)
+            rest_mask[p2_local] = False
+            rest = cand[rest_mask]
+            d1r = d_p1[rest_mask]
+            d2r = _one_to_many(metric_name, data[p2], data[rest])
+            go_left = d1r < d2r
+            li, ri = rest[go_left], rest[~go_left]
+
+            # extreme imbalance (< 5% on one side) degrades to linear
+            # depth; the ball fallback below guarantees halving instead
+            min_side = max(leaf_size, int(0.05 * rest.size))
+            unbalanced = (rest.size > 4 * leaf_size
+                          and min(li.size, ri.size) < min_side)
+
+            if li.size == 0 or ri.size == 0 or unbalanced:
+                # Degenerate hyperplane (every point on one side, e.g. p1
+                # central + p2 extreme outlier).  An arbitrary re-split
+                # would BREAK the hyperplane invariant and make both
+                # exclusion mechanisms unsound.  Fall back to a BALL node:
+                # p2 := p1, d12 := 0 so margins are identically 0 (never
+                # exclude); cover radii stay valid for ANY assignment, so
+                # we split by distance-to-p1 rank for balance.  The old p2
+                # candidate rejoins the members (it is not a pivot here).
+                order_ = np.argsort(d_p1, kind="stable")
+                half = cand.size // 2
+                li, ri = cand[order_[:half]], cand[order_[half:]]
+                nodes.p1[node], nodes.p2[node] = p1, p1
+                nodes.d12[node] = 0.0
+                nodes.inh[node] = inherited
+                nodes.cr1[node] = float(d_p1[order_[:half]].max()) \
+                    if li.size else 0.0
+                nodes.cr2[node] = float(d_p1[order_[half:]].max()) \
+                    if ri.size else 0.0
+                lnode, rnode = nodes.new(), nodes.new()
+                nodes.left[node], nodes.right[node] = lnode, rnode
+                inh_b = p1 if monotonous else -1
+                work.append((lnode, li, inh_b, depth + 1))
+                work.append((rnode, ri, inh_b, depth + 1))
+                continue
+
+            nodes.p1[node], nodes.p2[node] = p1, p2
+            nodes.d12[node] = float(
+                _one_to_many(metric_name, data[p1], data[p2][None, :])[0])
+            nodes.inh[node] = inherited
+            nodes.cr1[node] = float(d1r[go_left].max()) if li.size else 0.0
+            nodes.cr2[node] = float(d2r[~go_left].max()) if ri.size else 0.0
+            lnode, rnode = nodes.new(), nodes.new()
+            nodes.left[node], nodes.right[node] = lnode, rnode
+            inh_l = p1 if monotonous else -1
+            inh_r = p2 if monotonous else -1
+            work.append((lnode, li, inh_l, depth + 1))
+            work.append((rnode, ri, inh_r, depth + 1))
+            continue
+
+        # --- leaf -----------------------------------------------------------
+        nodes.ls[node] = bucket_pos
+        nodes.lc[node] = int(idx.size)
+        bucket_chunks.append(idx.astype(np.int32))
+        bucket_pos += int(idx.size)
+
+    bucket_ids = (np.concatenate(bucket_chunks).astype(np.int32)
+                  if bucket_chunks else np.zeros((0,), np.int32))
+    return BinaryHyperplaneTree(
+        data=np.asarray(data, np.float32),
+        perm=bucket_ids,
+        p1=np.asarray(nodes.p1, np.int32),
+        p2=np.asarray(nodes.p2, np.int32),
+        d12=np.asarray(nodes.d12, np.float32),
+        p1_inherited=np.asarray(nodes.inh, np.int32),
+        cover_r1=np.asarray(nodes.cr1, np.float32),
+        cover_r2=np.asarray(nodes.cr2, np.float32),
+        left=np.asarray(nodes.left, np.int32),
+        right=np.asarray(nodes.right, np.int32),
+        leaf_start=np.asarray(nodes.ls, np.int32),
+        leaf_count=np.asarray(nodes.lc, np.int32),
+    )
+
+
+def build_ght(data, metric_name: str, *, leaf_size: int = 32,
+              max_depth: int = 64, seed: int = 0) -> BinaryHyperplaneTree:
+    """Generalised Hyperplane Tree (Uhlmann 1991)."""
+    return _build_binary(np.asarray(data), metric_name, monotonous=False,
+                         leaf_size=leaf_size, max_depth=max_depth, seed=seed)
+
+
+def build_mht(data, metric_name: str, *, leaf_size: int = 32,
+              max_depth: int = 64, seed: int = 0) -> BinaryHyperplaneTree:
+    """Monotonous Hyperplane (Bisector*) Tree (Noltemeier et al. 1992)."""
+    return _build_binary(np.asarray(data), metric_name, monotonous=True,
+                         leaf_size=leaf_size, max_depth=max_depth, seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# DiSAT
+# ---------------------------------------------------------------------------
+
+def build_disat(data, metric_name: str, *, seed: int = 0,
+                distal: bool = True) -> SATree:
+    """Distal Spatial Approximation Tree (Chavez et al. 2014/2016).
+
+    Neighbour selection processes candidates in DECREASING distance from
+    the node (``distal=True``); v joins N(a) iff it is closer to a than to
+    every already-accepted neighbour, else it falls into the bag of its
+    closest neighbour.  ``distal=False`` gives the classic SAT order.
+
+    Greedy loop is O(|S|) python per node with O(|N|) vectorised rows;
+    sibling pairwise distances are stored for Hilbert Exclusion.
+    """
+    data = np.asarray(data)
+    rng = np.random.default_rng(seed)
+    n = data.shape[0]
+
+    child_start = np.full(n, -1, np.int64)
+    child_count = np.zeros(n, np.int64)
+    child_ids_chunks: list[np.ndarray] = []
+    child_pos = 0
+    cover_r = np.zeros(n, np.float64)
+    d_parent = np.zeros(n, np.float64)
+    sib_off = np.full(n, -1, np.int64)
+    sib_chunks: list[np.ndarray] = []
+    sib_pos = 0
+
+    root = int(rng.integers(n))
+    work: list[tuple[int, np.ndarray]] = [
+        (root, np.setdiff1d(np.arange(n, dtype=np.int64), [root]))]
+
+    while work:
+        a, members = work.pop()
+        if members.size == 0:
+            child_start[a] = 0
+            child_count[a] = 0
+            continue
+        d_a = _one_to_many(metric_name, data[a], data[members])
+        order = np.argsort(-d_a if distal else d_a, kind="stable")
+        members = members[order]
+        d_a = d_a[order]
+        cover_r[a] = float(d_a.max())
+
+        m = members.size
+        dmin = np.full(m, np.inf)           # distance to closest neighbour
+        amin = np.full(m, -1, np.int64)     # local index of that neighbour
+        neigh: list[int] = []               # local indices into members
+        for v in range(m):
+            if d_a[v] < dmin[v]:
+                # v becomes a new neighbour of a
+                nb_local = len(neigh)
+                neigh.append(v)
+                d_v = _one_to_many(metric_name, data[members[v]],
+                                   data[members])
+                upd = d_v < dmin
+                dmin = np.where(upd, d_v, dmin)
+                amin = np.where(upd, nb_local, amin)
+                dmin[v] = 0.0               # a neighbour belongs to itself
+                amin[v] = nb_local
+        neigh_arr = np.asarray(neigh, np.int64)
+        f = neigh_arr.size
+        cids = members[neigh_arr]
+
+        child_start[a] = child_pos
+        child_count[a] = f
+        child_ids_chunks.append(cids.astype(np.int32))
+        child_pos += f
+        d_parent[cids] = d_a[neigh_arr]
+
+        # sibling pairwise distances (build-time, free at query); zero
+        # the diagonal EXACTLY — matmul-trick noise (~1e-7) there would
+        # defeat the degenerate-denominator guard at query time
+        sib = _np_pairwise(metric_name, data[cids], data[cids])
+        np.fill_diagonal(sib, 0.0)
+        sib_off[a] = sib_pos
+        sib_chunks.append(sib.reshape(-1).astype(np.float32))
+        sib_pos += f * f
+
+        # bags: every non-neighbour member belongs to amin's bag
+        for nb_local in range(f):
+            bag_mask = amin == nb_local
+            bag_mask[neigh_arr[nb_local]] = False
+            bag = members[bag_mask]
+            work.append((int(cids[nb_local]), bag))
+
+    child_ids = (np.concatenate(child_ids_chunks).astype(np.int32)
+                 if child_ids_chunks else np.zeros((0,), np.int32))
+    sib_d = (np.concatenate(sib_chunks).astype(np.float32)
+             if sib_chunks else np.zeros((0,), np.float32))
+    return SATree(
+        data=np.asarray(data, np.float32),
+        perm=np.arange(n, dtype=np.int32),
+        root=np.int32(root),
+        child_start=child_start.astype(np.int32),
+        child_count=child_count.astype(np.int32),
+        child_ids=child_ids,
+        cover_r=cover_r.astype(np.float32),
+        d_parent=d_parent.astype(np.float32),
+        sib_off=sib_off.astype(np.int32),
+        sib_d=sib_d,
+    )

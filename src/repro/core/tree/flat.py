@@ -1,0 +1,108 @@
+"""Flat structure-of-arrays tree containers (pytrees).
+
+Pointer-free layouts so traversal is pure gathers — the TPU adaptation of
+the paper's CPU pointer-chasing indexes (DESIGN.md §2).  All index arrays
+are int32; -1 means "none".  Data is stored permuted so every leaf bucket
+is a contiguous range; ``perm`` maps permuted position -> original id.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _pytree(cls):
+    """Register a dataclass of arrays as a jax pytree (all fields leaves)."""
+    fields = [f.name for f in dataclasses.fields(cls)]
+
+    def flatten(obj):
+        return [getattr(obj, n) for n in fields], None
+
+    def unflatten(_, leaves):
+        return cls(*leaves)
+
+    jax.tree_util.register_pytree_node(cls, flatten, unflatten)
+    return cls
+
+
+@_pytree
+@dataclasses.dataclass
+class BinaryHyperplaneTree:
+    """GHT / MHT in flat form.
+
+    Node i is INTERNAL iff left[i] >= 0 (a split node), else a LEAF holding
+    the permuted-data range [leaf_start[i], leaf_start[i]+leaf_count[i]).
+
+    Internal node fields:
+      p1, p2        : permuted-data positions of the two pivots
+      d12           : d(p1, p2), precomputed at build (Hilbert denominator)
+      p1_inherited  : 1 if p1 is the parent's owning pivot (MHT) -> its
+                      query distance is carried down, not recomputed
+      cover_r1/2    : max distance from pivot k to any point in child k
+                      (bisector-tree cover radii; paper §6.3 uses both
+                      cover-radius and hyperplane exclusion)
+      left, right   : child node ids (p1 side / p2 side)
+    """
+    data: Any          # (n, d) permuted points
+    perm: Any          # (n,) permuted position -> original id
+    p1: Any            # (m,) int32
+    p2: Any            # (m,) int32
+    d12: Any           # (m,) f32
+    p1_inherited: Any  # (m,) int32 (0/1)
+    cover_r1: Any      # (m,) f32
+    cover_r2: Any      # (m,) f32
+    left: Any          # (m,) int32
+    right: Any         # (m,) int32
+    leaf_start: Any    # (m,) int32
+    leaf_count: Any    # (m,) int32
+
+    @property
+    def n_nodes(self) -> int:
+        return int(self.p1.shape[0])
+
+    @property
+    def n_points(self) -> int:
+        return int(self.data.shape[0])
+
+
+@_pytree
+@dataclasses.dataclass
+class SATree:
+    """Distal Spatial Approximation Tree (DiSAT) in flat CSR form.
+
+    Every data point is exactly one node; node ids ARE permuted-data
+    positions.  Node i has children child_ids[child_start[i] :
+    child_start[i] + child_count[i]] (ordered as selected at build, i.e.
+    distal order).
+
+    cover_r[i]   : max d(i, x) over x in the subtree rooted at i
+    d_parent[i]  : d(i, parent(i))  (root: 0) — Hilbert denominator when
+                   the winning "sibling" is the parent node itself
+    sib_off[i]   : offset into sib_d of node i's F_i x F_i sibling-distance
+                   matrix, row-major with stride child_count[i]; -1 if no
+                   children.  sib_d[sib_off[i] + a*F_i + b] = d(child_a,
+                   child_b) — the build-time distances that Hilbert
+                   Exclusion needs (paper footnote 1).
+    """
+    data: Any         # (n, d)
+    perm: Any         # (n,)
+    root: Any         # () int32
+    child_start: Any  # (n,) int32
+    child_count: Any  # (n,) int32
+    child_ids: Any    # (total_children,) int32
+    cover_r: Any      # (n,) f32
+    d_parent: Any     # (n,) f32
+    sib_off: Any      # (n,) int32
+    sib_d: Any        # (total_sib_entries,) f32
+
+    @property
+    def n_points(self) -> int:
+        return int(self.data.shape[0])
+
+    @property
+    def max_fanout(self) -> int:
+        return int(np.max(np.asarray(self.child_count)))

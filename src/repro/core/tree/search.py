@@ -1,0 +1,366 @@
+"""Jittable batched tree traversal with selectable exclusion mechanism.
+
+Both engines run all query lanes in lockstep: each ``lax.while_loop``
+iteration pops one node per lane, evaluates the lane's query-to-pivot
+distances (the paper's unit of cost — counted exactly), applies the
+selected exclusion (hyperbolic / hilbert) plus cover-radius exclusion,
+and pushes surviving children.  Lanes with empty stacks idle (masked).
+
+Exact range search: for the same (tree, queries, t) every mechanism must
+return the identical result set (paper §6.5); tests assert this.
+
+Static jit arguments: metric name, mechanism, buffer sizes.  The tree is
+a dynamic pytree operand, so one compilation serves every tree of the
+same shape.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import exclusion as excl
+from repro.core import metrics as metrics_lib
+from repro.core.blockdist import block_distance, one_distance
+from repro.core.tree.flat import BinaryHyperplaneTree, SATree
+
+Array = jnp.ndarray
+
+_I32 = jnp.int32
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class SearchStats:
+    """Per-query search outcome.
+
+    res_ids:  (Q, R) original data ids of results (first res_cnt valid,
+              capped at R; overflow flags truncation)
+    res_cnt:  (Q,) true number of results (may exceed R)
+    n_dist:   (Q,) query-to-object distance evaluations (the paper's cost)
+    overflow: (Q,) result buffer overflow
+    stack_overflow: (Q,) traversal stack overflow (correctness violated if
+              set — sized so tests prove it never fires)
+    iters:    () loop iterations executed
+    """
+    res_ids: Any
+    res_cnt: Any
+    n_dist: Any
+    overflow: Any
+    stack_overflow: Any
+    iters: Any
+
+    def tree_flatten(self):
+        return ((self.res_ids, self.res_cnt, self.n_dist, self.overflow,
+                 self.stack_overflow, self.iters), None)
+
+    @classmethod
+    def tree_unflatten(cls, _, leaves):
+        return cls(*leaves)
+
+    def result_sets(self) -> list[set[int]]:
+        """Host-side: per-query sets of result ids (requires no overflow)."""
+        ids = np.asarray(self.res_ids)
+        cnt = np.asarray(self.res_cnt)
+        return [set(ids[i, :min(int(cnt[i]), ids.shape[1])].tolist())
+                for i in range(ids.shape[0])]
+
+
+def _margin(mechanism: str, d1: Array, d2: Array, d12: Array) -> Array:
+    if mechanism == "hyperbolic":
+        return excl.hyperbolic_margin(d1, d2, d12)
+    if mechanism == "hilbert":
+        return excl.hilbert_margin(d1, d2, d12)
+    raise ValueError(f"unknown mechanism {mechanism!r}")
+
+
+def _check_mechanism(metric_name: str, mechanism: str) -> None:
+    metric = metrics_lib.get(metric_name)
+    excl.margin_fn_for(metric, mechanism)  # raises if unsound
+
+
+def _append_results(res_ids, res_cnt, overflow, lane, ids, hits, r_cap):
+    """Append up to W hits per lane into the fixed (Q, R) buffer."""
+    pos = res_cnt[:, None] + jnp.cumsum(hits.astype(_I32), axis=1) - 1
+    ok = hits & (pos < r_cap)
+    wpos = jnp.where(ok, pos, r_cap)              # r_cap column == dropped
+    res_ids = res_ids.at[lane[:, None], wpos].set(
+        ids.astype(_I32), mode="drop")
+    res_cnt = res_cnt + jnp.sum(hits, axis=1).astype(_I32)
+    overflow = overflow | (res_cnt > r_cap)
+    return res_ids, res_cnt, overflow
+
+
+# ---------------------------------------------------------------------------
+# binary (GHT / MHT)
+# ---------------------------------------------------------------------------
+
+@functools.partial(
+    jax.jit, static_argnames=("metric_name", "mechanism", "r_cap",
+                              "stack_cap", "leaf_cap", "use_cover_radius"))
+def _search_binary(tree: BinaryHyperplaneTree, queries: Array, t: Array,
+                   *, metric_name: str, mechanism: str, r_cap: int,
+                   stack_cap: int, leaf_cap: int,
+                   use_cover_radius: bool) -> SearchStats:
+    nq = queries.shape[0]
+    n = tree.data.shape[0]
+    lane = jnp.arange(nq, dtype=_I32)
+    t = jnp.broadcast_to(jnp.asarray(t, jnp.float32), (nq,))
+
+    stack_n = jnp.zeros((nq, stack_cap), _I32)          # root = node 0
+    stack_d = jnp.zeros((nq, stack_cap), jnp.float32)
+    sp = jnp.ones((nq,), _I32)
+    res_ids = jnp.full((nq, r_cap + 1), -1, _I32)       # +1 drop column
+    res_cnt = jnp.zeros((nq,), _I32)
+    n_dist = jnp.zeros((nq,), _I32)
+    overflow = jnp.zeros((nq,), bool)
+    stack_ovf = jnp.zeros((nq,), bool)
+    max_iter = tree.p1.shape[0] + 8                      # ≤ nodes visited
+
+    def cond(st):
+        (_, _, sp, _, _, _, _, _, it) = st
+        return jnp.any(sp > 0) & (it < max_iter)
+
+    def body(st):
+        (stack_n, stack_d, sp, res_ids, res_cnt, n_dist, overflow,
+         stack_ovf, it) = st
+        active = sp > 0
+        top = jnp.maximum(sp - 1, 0)
+        node = jnp.take_along_axis(stack_n, top[:, None], 1)[:, 0]
+        carried = jnp.take_along_axis(stack_d, top[:, None], 1)[:, 0]
+        sp = sp - active.astype(_I32)
+
+        left = tree.left[node]
+        right = tree.right[node]
+        is_int = (left >= 0) & active
+        is_leaf = (left < 0) & active
+
+        # ---- internal node ------------------------------------------------
+        p1 = tree.p1[node]
+        p2 = tree.p2[node]
+        d12 = tree.d12[node]
+        inh = tree.p1_inherited[node] == 1
+        same_pivot = p1 == p2                     # ball-fallback node
+        p1v = tree.data[jnp.clip(p1, 0, n - 1)]
+        p2v = tree.data[jnp.clip(p2, 0, n - 1)]
+        d1f = one_distance(metric_name, queries, p1v)
+        d2c = one_distance(metric_name, queries, p2v)
+        d1 = jnp.where(inh, carried, d1f)
+        d2 = jnp.where(same_pivot, d1, d2c)
+        # fresh distances: p1 unless inherited, p2 unless it IS p1
+        n_dist = n_dist + jnp.where(
+            is_int,
+            (1 - inh.astype(_I32)) + (1 - same_pivot.astype(_I32)),
+            0)
+        hit_p1 = is_int & ~inh & (d1f <= t)
+        hit_p2 = is_int & ~same_pivot & (d2 <= t)
+
+        m = _margin(mechanism, d1, d2, d12)
+        excl_l = m > t
+        excl_r = (-m) > t
+        if use_cover_radius:
+            excl_l = excl_l | (d1 > tree.cover_r1[node] + t)
+            excl_r = excl_r | (d2 > tree.cover_r2[node] + t)
+        push_l = is_int & ~excl_l
+        push_r = is_int & ~excl_r
+
+        # ---- leaf ----------------------------------------------------------
+        start = tree.leaf_start[node]
+        cnt = tree.leaf_count[node]
+        cols = jnp.arange(leaf_cap, dtype=_I32)[None, :]
+        lmask = is_leaf[:, None] & (cols < cnt[:, None])
+        bslot = jnp.clip(start[:, None] + cols, 0,
+                         jnp.maximum(tree.perm.shape[0] - 1, 0))
+        bidx = tree.perm[bslot] if tree.perm.shape[0] else \
+            jnp.zeros((nq, leaf_cap), _I32)
+        pts = tree.data[bidx]                            # (Q, L, d)
+        dl = block_distance(metric_name, queries, pts)
+        n_dist = n_dist + jnp.sum(lmask, axis=1).astype(_I32)
+        lhit = lmask & (dl <= t[:, None])
+
+        # ---- results ---------------------------------------------------
+        ids = jnp.concatenate([p1[:, None], p2[:, None], bidx], axis=1)
+        hms = jnp.concatenate(
+            [hit_p1[:, None], hit_p2[:, None], lhit], axis=1)
+        res_ids, res_cnt, overflow = _append_results(
+            res_ids, res_cnt, overflow, lane, ids, hms, r_cap)
+
+        # ---- pushes (right first => left explored first) -----------------
+        wr = jnp.where(push_r, sp, stack_cap)
+        stack_n = stack_n.at[lane, wr].set(right, mode="drop")
+        stack_d = stack_d.at[lane, wr].set(d2, mode="drop")
+        sp = sp + push_r.astype(_I32)
+        wl = jnp.where(push_l, sp, stack_cap)
+        stack_n = stack_n.at[lane, wl].set(left, mode="drop")
+        stack_d = stack_d.at[lane, wl].set(d1, mode="drop")
+        sp = sp + push_l.astype(_I32)
+        stack_ovf = stack_ovf | (sp > stack_cap)
+
+        return (stack_n, stack_d, sp, res_ids, res_cnt, n_dist, overflow,
+                stack_ovf, it + 1)
+
+    init = (stack_n, stack_d, sp, res_ids, res_cnt, n_dist, overflow,
+            stack_ovf, jnp.zeros((), _I32))
+    (stack_n, stack_d, sp, res_ids, res_cnt, n_dist, overflow, stack_ovf,
+     it) = jax.lax.while_loop(cond, body, init)
+    return SearchStats(res_ids[:, :r_cap], res_cnt, n_dist, overflow,
+                       stack_ovf, it)
+
+
+def search_binary_tree(tree: BinaryHyperplaneTree, queries, t, *,
+                       metric_name: str, mechanism: str = "hilbert",
+                       r_cap: int = 128, stack_cap: int = 128,
+                       use_cover_radius: bool = True) -> SearchStats:
+    """Range search on a GHT/MHT.  mechanism in {'hyperbolic','hilbert'}."""
+    _check_mechanism(metric_name, mechanism)
+    leaf_cap = int(np.max(np.asarray(tree.leaf_count))) if \
+        tree.leaf_count.shape[0] else 1
+    tree = jax.tree_util.tree_map(jnp.asarray, tree)
+    return _search_binary(
+        tree, jnp.asarray(queries, jnp.float32), t,
+        metric_name=metric_name, mechanism=mechanism, r_cap=r_cap,
+        stack_cap=stack_cap, leaf_cap=max(leaf_cap, 1),
+        use_cover_radius=use_cover_radius)
+
+
+# ---------------------------------------------------------------------------
+# DiSAT
+# ---------------------------------------------------------------------------
+
+@functools.partial(
+    jax.jit, static_argnames=("metric_name", "mechanism", "r_cap",
+                              "stack_cap", "fan_cap", "use_cover_radius"))
+def _search_sat(tree: SATree, queries: Array, t: Array, *,
+                metric_name: str, mechanism: str, r_cap: int,
+                stack_cap: int, fan_cap: int,
+                use_cover_radius: bool) -> SearchStats:
+    nq = queries.shape[0]
+    n = tree.data.shape[0]
+    lane = jnp.arange(nq, dtype=_I32)
+    t = jnp.broadcast_to(jnp.asarray(t, jnp.float32), (nq,))
+
+    # root distance: computed once, counts once, may itself be a result
+    rootv = tree.data[tree.root]
+    d_root = one_distance(metric_name, queries,
+                          jnp.broadcast_to(rootv, queries.shape))
+    res_ids = jnp.full((nq, r_cap + 1), -1, _I32)
+    res_cnt = jnp.zeros((nq,), _I32)
+    overflow = jnp.zeros((nq,), bool)
+    res_ids, res_cnt, overflow = _append_results(
+        res_ids, res_cnt, overflow, lane,
+        jnp.broadcast_to(tree.root, (nq,))[:, None],
+        (d_root <= t)[:, None], r_cap)
+
+    stack_n = jnp.zeros((nq, stack_cap), _I32)
+    stack_n = stack_n.at[:, 0].set(tree.root)
+    stack_d = jnp.zeros((nq, stack_cap), jnp.float32)
+    stack_d = stack_d.at[:, 0].set(d_root)
+    sp = jnp.ones((nq,), _I32)
+    n_dist = jnp.ones((nq,), _I32)
+    stack_ovf = jnp.zeros((nq,), bool)
+    max_iter = n + 8
+
+    def cond(st):
+        (_, _, sp, _, _, _, _, _, it) = st
+        return jnp.any(sp > 0) & (it < max_iter)
+
+    def body(st):
+        (stack_n, stack_d, sp, res_ids, res_cnt, n_dist, overflow,
+         stack_ovf, it) = st
+        active = sp > 0
+        top = jnp.maximum(sp - 1, 0)
+        node = jnp.take_along_axis(stack_n, top[:, None], 1)[:, 0]
+        d_self = jnp.take_along_axis(stack_d, top[:, None], 1)[:, 0]
+        sp = sp - active.astype(_I32)
+
+        off = tree.child_start[node]
+        fcnt = tree.child_count[node]
+        cols = jnp.arange(fan_cap, dtype=_I32)[None, :]
+        cmask = active[:, None] & (cols < fcnt[:, None])
+        cslot = jnp.clip(off[:, None] + cols, 0,
+                         jnp.maximum(tree.child_ids.shape[0] - 1, 0))
+        cids = tree.child_ids[cslot] if tree.child_ids.shape[0] else \
+            jnp.zeros((nq, fan_cap), _I32)
+        pts = tree.data[cids]                          # (Q, F, d)
+        dc = block_distance(metric_name, queries, pts)  # (Q, F)
+        dc = jnp.where(cmask, dc, jnp.inf)
+        n_dist = n_dist + jnp.sum(cmask, axis=1).astype(_I32)
+
+        hits = cmask & (dc <= t[:, None])
+        res_ids, res_cnt, overflow = _append_results(
+            res_ids, res_cnt, overflow, lane, cids, hits, r_cap)
+
+        # winner c* over children ∪ {self}
+        cmin_idx = jnp.argmin(dc, axis=1)              # (Q,)
+        cmin = jnp.take_along_axis(dc, cmin_idx[:, None], 1)[:, 0]
+        self_wins = d_self < cmin
+        dmin = jnp.minimum(cmin, d_self)
+
+        if mechanism == "hilbert":
+            # denominator: d(c, c*) — sibling matrix row, or d(c, parent)
+            f = fcnt[:, None]
+            sib_base = tree.sib_off[node][:, None]
+            sib_idx = sib_base + cols * f + cmin_idx[:, None]
+            sib_idx = jnp.clip(sib_idx, 0,
+                               jnp.maximum(tree.sib_d.shape[0] - 1, 0))
+            d_c_cstar = tree.sib_d[sib_idx] if tree.sib_d.shape[0] else \
+                jnp.ones((nq, fan_cap), jnp.float32)
+            d_den = jnp.where(self_wins[:, None], tree.d_parent[cids],
+                              d_c_cstar)
+            # Never exclude the winner itself (its margin is an exact 0
+            # eagerly but FMA-contracted noise over a ~0 denominator in
+            # fused loops), and never divide by a near-degenerate
+            # bisector (< 1e-6: near-duplicate pivots define no usable
+            # hyperplane).
+            is_winner = (~self_wins[:, None]) & (cols == cmin_idx[:, None])
+            margin = jnp.where(
+                (d_den > 1e-6) & ~is_winner,
+                (dc * dc - dmin[:, None] ** 2) /
+                (2.0 * jnp.maximum(d_den, 1e-12)),
+                -jnp.inf)
+        else:
+            margin = (dc - dmin[:, None]) * 0.5
+        excl_c = margin > t[:, None]
+        if use_cover_radius:
+            excl_c = excl_c | (dc > tree.cover_r[cids] + t[:, None])
+        has_kids = tree.child_count[cids] > 0
+        push = cmask & ~excl_c & has_kids
+
+        # batched multi-push
+        pos = sp[:, None] + jnp.cumsum(push.astype(_I32), axis=1) - 1
+        wpos = jnp.where(push, pos, stack_cap)
+        stack_n = stack_n.at[lane[:, None], wpos].set(cids, mode="drop")
+        stack_d = stack_d.at[lane[:, None], wpos].set(
+            jnp.where(jnp.isfinite(dc), dc, 0.0), mode="drop")
+        sp = sp + jnp.sum(push, axis=1).astype(_I32)
+        stack_ovf = stack_ovf | (sp > stack_cap)
+
+        return (stack_n, stack_d, sp, res_ids, res_cnt, n_dist, overflow,
+                stack_ovf, it + 1)
+
+    init = (stack_n, stack_d, sp, res_ids, res_cnt, n_dist, overflow,
+            stack_ovf, jnp.zeros((), _I32))
+    (stack_n, stack_d, sp, res_ids, res_cnt, n_dist, overflow, stack_ovf,
+     it) = jax.lax.while_loop(cond, body, init)
+    return SearchStats(res_ids[:, :r_cap], res_cnt, n_dist, overflow,
+                       stack_ovf, it)
+
+
+def search_sat(tree: SATree, queries, t, *, metric_name: str,
+               mechanism: str = "hilbert", r_cap: int = 128,
+               stack_cap: int = 4096,
+               use_cover_radius: bool = True) -> SearchStats:
+    """Range search on a DiSAT.  mechanism in {'hyperbolic','hilbert'}."""
+    _check_mechanism(metric_name, mechanism)
+    fan_cap = max(tree.max_fanout, 1)
+    tree = jax.tree_util.tree_map(jnp.asarray, tree)
+    return _search_sat(
+        tree, jnp.asarray(queries, jnp.float32), t,
+        metric_name=metric_name, mechanism=mechanism, r_cap=r_cap,
+        stack_cap=stack_cap, fan_cap=fan_cap,
+        use_cover_radius=use_cover_radius)

@@ -1,0 +1,1 @@
+from repro.data import synthetic, sampler, pipeline  # noqa: F401

@@ -1,0 +1,50 @@
+"""Host input pipeline: background prefetch with a bounded queue.
+
+Keeps the accelerator step from ever waiting on host batch synthesis
+(straggler mitigation lever #1 — DESIGN.md §5): depth-2+ prefetch decouples
+host jitter from device step time.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable, Iterator
+
+
+class Prefetcher:
+    """Wraps a step->batch function in a producer thread."""
+
+    def __init__(self, make_batch: Callable[[int], dict], start_step: int,
+                 depth: int = 2):
+        self._make = make_batch
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+        self._step = start_step
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+
+    def _run(self):
+        step = self._step
+        while not self._stop.is_set():
+            batch = self._make(step)
+            while not self._stop.is_set():
+                try:
+                    self._q.put((step, batch), timeout=0.1)
+                    break
+                except queue.Full:
+                    continue
+            step += 1
+
+    def __iter__(self) -> Iterator[tuple[int, dict]]:
+        while True:
+            yield self._q.get()
+
+    def close(self):
+        self._stop.set()
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass
+        self._thread.join(timeout=2)

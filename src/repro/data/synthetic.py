@@ -1,0 +1,111 @@
+"""Synthetic corpora for every arch family (offline container: no
+downloads).  Deterministic per (seed, step) => restart-reproducible, which
+the fault-tolerance tests rely on.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def token_batch(seed: int, step: int, batch: int, seq: int,
+                vocab: int) -> dict:
+    """LM batch: zipf-ish token stream + next-token targets."""
+    rng = np.random.default_rng(np.random.SeedSequence([seed, step]))
+    # zipf via inverse-cdf over ranked ids (heavier head than uniform)
+    u = rng.random((batch, seq + 1))
+    toks = np.minimum((vocab * u ** 2.2).astype(np.int64), vocab - 1)
+    return {"tokens": toks[:, :-1].astype(np.int32),
+            "targets": toks[:, 1:].astype(np.int32)}
+
+
+def click_batch(seed: int, step: int, batch: int, n_dense: int,
+                vocab_sizes, *, seq_len: int = 0) -> dict:
+    """Criteo-like CTR batch; optional behaviour sequence for BST."""
+    rng = np.random.default_rng(np.random.SeedSequence([seed, step, 7]))
+    out = {
+        "dense": rng.normal(size=(batch, n_dense)).astype(np.float32),
+        "sparse_ids": np.stack(
+            [rng.integers(0, v, batch) for v in vocab_sizes],
+            axis=1).astype(np.int32),
+        "labels": (rng.random(batch) < 0.25).astype(np.float32),
+    }
+    if seq_len:
+        out["hist_ids"] = rng.integers(
+            0, vocab_sizes[0], (batch, seq_len)).astype(np.int32)
+        out["target_id"] = rng.integers(0, vocab_sizes[0], batch) \
+            .astype(np.int32)
+    return out
+
+
+def retrieval_batch(seed: int, step: int, batch: int, n_user_feats: int,
+                    n_item_feats: int, user_vocab: int,
+                    item_vocab: int) -> dict:
+    rng = np.random.default_rng(np.random.SeedSequence([seed, step, 11]))
+    return {
+        "user_ids": rng.integers(0, user_vocab,
+                                 (batch, n_user_feats)).astype(np.int32),
+        "item_ids": rng.integers(0, item_vocab,
+                                 (batch, n_item_feats)).astype(np.int32),
+    }
+
+
+def random_graph(seed: int, n_nodes: int, n_edges: int, d_feat: int,
+                 n_classes: int = 40, *, power_law: bool = True) -> dict:
+    """Undirected-ish edge list with power-law-ish degree distribution
+    (the regime GNN samplers face on ogbn-style graphs)."""
+    rng = np.random.default_rng(seed)
+    if power_law:
+        w = 1.0 / np.arange(1, n_nodes + 1) ** 0.5
+        p = w / w.sum()
+        src = rng.choice(n_nodes, n_edges, p=p).astype(np.int32)
+    else:
+        src = rng.integers(0, n_nodes, n_edges).astype(np.int32)
+    dst = rng.integers(0, n_nodes, n_edges).astype(np.int32)
+    return {
+        "x": rng.normal(size=(n_nodes, d_feat)).astype(np.float32),
+        "src": src, "dst": dst,
+        "labels": rng.integers(0, n_classes, n_nodes).astype(np.int32),
+    }
+
+
+def molecule_batch(seed: int, step: int, batch: int, n_nodes: int,
+                   n_edges: int, d_feat: int, n_classes: int = 2) -> dict:
+    """`molecule` cell: `batch` small graphs padded into one block."""
+    rng = np.random.default_rng(np.random.SeedSequence([seed, step, 13]))
+    total_n = batch * n_nodes
+    x = rng.normal(size=(total_n, d_feat)).astype(np.float32)
+    src = np.concatenate([
+        rng.integers(0, n_nodes, n_edges) + g * n_nodes
+        for g in range(batch)]).astype(np.int32)
+    dst = np.concatenate([
+        rng.integers(0, n_nodes, n_edges) + g * n_nodes
+        for g in range(batch)]).astype(np.int32)
+    graph_ids = np.repeat(np.arange(batch), n_nodes).astype(np.int32)
+    labels = rng.integers(0, n_classes, batch).astype(np.int32)
+    return {"x": x, "src": src, "dst": dst, "graph_ids": graph_ids,
+            "labels": labels}
+
+
+def metric_space(seed: int, n: int, dim: int, *, simplex: bool = False,
+                 clustered: int = 0) -> np.ndarray:
+    """Paper §6.1 spaces: uniform unit hypercube; ``clustered`` > 0 gives
+    a Gaussian-mixture stand-in for the SISAP real-data regime."""
+    rng = np.random.default_rng(seed)
+    if clustered:
+        # multi-scale mixture: per-cluster sigma log-uniform in
+        # [0.02, 0.25] — real feature datasets (SISAP colors/nasa) have
+        # structure at several scales; single-scale blobs make hyperplane
+        # exclusion artificially useless
+        centers = rng.random((clustered, dim))
+        sigma = np.exp(rng.uniform(np.log(0.02), np.log(0.25), clustered))
+        which = rng.integers(0, clustered, n)
+        pts = centers[which] + sigma[which, None] * rng.normal(
+            size=(n, dim))
+        pts = np.abs(pts)
+    else:
+        pts = rng.random((n, dim))
+    pts = pts.astype(np.float32)
+    if simplex:
+        pts = pts / np.maximum(pts.sum(-1, keepdims=True), 1e-9)
+    return pts

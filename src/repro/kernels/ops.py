@@ -1,0 +1,78 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Handles padding to block multiples, cosine pre-normalisation, dtype
+management, and the CPU(interpret) / TPU(compiled) switch.  On this
+container only interpret mode runs; on TPU set
+``repro.kernels.ops.INTERPRET = False`` (or the REPRO_PALLAS_COMPILED=1
+env var) to lower for real.
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.pairwise import pairwise_pallas, _BLOCKS
+from repro.kernels.exclusion_step import exclusion_margins_pallas
+
+INTERPRET = os.environ.get("REPRO_PALLAS_COMPILED", "0") != "1"
+
+_EPS = 1e-12
+
+
+def _pad_to(a: jnp.ndarray, m0: int, m1: int) -> jnp.ndarray:
+    p0 = (-a.shape[0]) % m0
+    p1 = (-a.shape[1]) % m1
+    if p0 or p1:
+        a = jnp.pad(a, ((0, p0), (0, p1)))
+    return a
+
+
+@functools.partial(jax.jit, static_argnames=("kind", "interpret"))
+def _pairwise(q, x, *, kind: str, interpret: bool):
+    bm, bn, bk = _BLOCKS[kind]
+    mq, nx = q.shape[0], x.shape[0]
+    if kind == "cosine_prenorm":
+        q = q / jnp.maximum(jnp.linalg.norm(q, axis=-1, keepdims=True), _EPS)
+        x = x / jnp.maximum(jnp.linalg.norm(x, axis=-1, keepdims=True), _EPS)
+    qp = _pad_to(q, bm, bk)
+    xp = _pad_to(x, bn, bk)
+    out = pairwise_pallas(qp, xp, kind, interpret=interpret)
+    return out[:mq, :nx]
+
+
+def pairwise_distance(q, x, metric_name: str, *,
+                      interpret: bool | None = None) -> jnp.ndarray:
+    """Kernel-backed pairwise distances.  metric_name in
+    {euclidean, sqeuclidean, cosine, jsd, triangular}."""
+    kind = {"euclidean": "euclidean", "sqeuclidean": "sqeuclidean",
+            "cosine": "cosine_prenorm", "jsd": "jsd",
+            "triangular": "triangular"}[metric_name]
+    itp = INTERPRET if interpret is None else interpret
+    return _pairwise(jnp.asarray(q, jnp.float32), jnp.asarray(x, jnp.float32),
+                     kind=kind, interpret=itp)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _excl(q, p1, p2, d12, *, interpret: bool):
+    bq, bp, bk = 128, 128, 128
+    mq, pp = q.shape[0], p1.shape[0]
+    qp = _pad_to(q, bq, bk)
+    p1p = _pad_to(p1, bp, bk)
+    p2p = _pad_to(p2, bp, bk)
+    dp = jnp.pad(d12, (0, (-pp) % bp))
+    hyp, hil = exclusion_margins_pallas(qp, p1p, p2p, dp,
+                                        interpret=interpret)
+    return hyp[:mq, :pp], hil[:mq, :pp]
+
+
+def exclusion_margins(q, p1, p2, d12, *, interpret: bool | None = None):
+    """Fused Euclidean partition margins: returns (hyperbolic, hilbert),
+    each (Q, P);  margin > t  =>  the p1 side of pair j is excludable."""
+    itp = INTERPRET if interpret is None else interpret
+    return _excl(jnp.asarray(q, jnp.float32), jnp.asarray(p1, jnp.float32),
+                 jnp.asarray(p2, jnp.float32), jnp.asarray(d12, jnp.float32),
+                 interpret=itp)

@@ -1,0 +1,174 @@
+"""Pallas TPU kernels: tiled pairwise distances (the paper's hot spot).
+
+TPU adaptation (DESIGN.md §2): the paper's per-object distance evaluation
+becomes dense tile evaluation.  Two kernel families:
+
+  * MXU family (euclidean / cosine): distance reduces to a matmul plus
+    rank-1 row/col norm terms -> systolic-array bound.  Grid (i, j, k)
+    over (Q tiles, X tiles, D chunks); f32 accumulation in the output
+    tile, which Pallas keeps resident in VMEM across the k loop because
+    its index_map ignores k.
+
+  * VPU family (jsd / triangular): the cross term h(q+x) / (q-x)^2/(q+x)
+    cannot factor into a matmul; it is an elementwise O(Q*N*D) loop.
+    Same grid; the (BM, BN, BK) broadcast lives only in VMEM/VREGs.
+
+Block sizes are MXU/VREG aligned (multiples of 8x128 lanes).  All inputs
+are zero-padded by the ops.py wrapper; padding is harmless for every
+family (h(0)=0; 0/0 guarded; zero rows add zero to dots/norms).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_EPS = 1e-12
+
+
+# ---------------------------------------------------------------------------
+# MXU family: squared-L2 / dot accumulation
+# ---------------------------------------------------------------------------
+
+def _l2_kernel(q_ref, x_ref, o_ref, *, nk: int, squared: bool):
+    """Accumulate |q|^2 + |x|^2 - 2 q.x over D chunks; sqrt on last chunk."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    q = q_ref[...].astype(jnp.float32)          # (BM, BK)
+    x = x_ref[...].astype(jnp.float32)          # (BN, BK)
+    acc = o_ref[...]
+    acc += jnp.sum(q * q, -1)[:, None]
+    acc += jnp.sum(x * x, -1)[None, :]
+    acc += -2.0 * jax.lax.dot_general(
+        q, x, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+    o_ref[...] = acc
+
+    @pl.when(k == nk - 1)
+    def _finish():
+        d2 = jnp.maximum(o_ref[...], 0.0)
+        o_ref[...] = d2 if squared else jnp.sqrt(d2)
+
+
+def _dot_kernel(q_ref, x_ref, o_ref, *, nk: int):
+    """Accumulate q.x over D chunks; finish as sqrt(1 - dot) (cosine on
+    pre-normalised rows)."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    q = q_ref[...].astype(jnp.float32)
+    x = x_ref[...].astype(jnp.float32)
+    o_ref[...] += jax.lax.dot_general(
+        q, x, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _finish():
+        sim = jnp.clip(o_ref[...], -1.0, 1.0)
+        o_ref[...] = jnp.sqrt(jnp.maximum(1.0 - sim, 0.0))
+
+
+# ---------------------------------------------------------------------------
+# VPU family: f-divergence accumulation
+# ---------------------------------------------------------------------------
+
+def _h(v):
+    safe = jnp.where(v > _EPS, v, 1.0)
+    return jnp.where(v > _EPS, -safe * jnp.log2(safe), 0.0)
+
+
+def _jsd_kernel(q_ref, x_ref, o_ref, *, nk: int):
+    """acc += sum_k h(q)+h(x)-h(q+x); finish sqrt(max(1 - acc/2, 0))."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    q = q_ref[...].astype(jnp.float32)           # (BM, BK)
+    x = x_ref[...].astype(jnp.float32)           # (BN, BK)
+    hq = jnp.sum(_h(q), -1)[:, None]
+    hx = jnp.sum(_h(x), -1)[None, :]
+    hqx = jnp.sum(_h(q[:, None, :] + x[None, :, :]), -1)
+    o_ref[...] += hq + hx - hqx
+
+    @pl.when(k == nk - 1)
+    def _finish():
+        o_ref[...] = jnp.sqrt(jnp.maximum(1.0 - 0.5 * o_ref[...], 0.0))
+
+
+def _triangular_kernel(q_ref, x_ref, o_ref, *, nk: int):
+    """acc += sum_k (q-x)^2/(q+x); finish sqrt."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    q = q_ref[...].astype(jnp.float32)
+    x = x_ref[...].astype(jnp.float32)
+    diff2 = (q[:, None, :] - x[None, :, :]) ** 2
+    den = q[:, None, :] + x[None, :, :]
+    o_ref[...] += jnp.sum(
+        jnp.where(den > _EPS, diff2 / jnp.maximum(den, _EPS), 0.0), -1)
+
+    @pl.when(k == nk - 1)
+    def _finish():
+        o_ref[...] = jnp.sqrt(jnp.maximum(o_ref[...], 0.0))
+
+
+_KERNELS = {
+    "euclidean": functools.partial(_l2_kernel, squared=False),
+    "sqeuclidean": functools.partial(_l2_kernel, squared=True),
+    "cosine_prenorm": _dot_kernel,
+    "jsd": _jsd_kernel,
+    "triangular": _triangular_kernel,
+}
+
+# (BM, BN, BK): MXU family uses 128-square tiles; VPU family keeps the
+# (BM, BN, BK) broadcast under ~2 MiB of VMEM.
+_BLOCKS = {
+    "euclidean": (128, 128, 128),
+    "sqeuclidean": (128, 128, 128),
+    "cosine_prenorm": (128, 128, 128),
+    "jsd": (32, 32, 128),
+    "triangular": (32, 32, 128),
+}
+
+
+def pairwise_pallas(q: jnp.ndarray, x: jnp.ndarray, kind: str, *,
+                    interpret: bool = True) -> jnp.ndarray:
+    """Tiled pairwise distances.  q: (Q, D), x: (N, D) -> (Q, N) f32.
+
+    Inputs MUST already be padded to block multiples (ops.py does this).
+    ``interpret=True`` executes the kernel body in Python on CPU — the
+    validation mode for this container; on TPU pass interpret=False.
+    """
+    kernel = _KERNELS[kind]
+    bm, bn, bk = _BLOCKS[kind]
+    m, d = q.shape
+    n, d2 = x.shape
+    assert d == d2, (q.shape, x.shape)
+    assert m % bm == 0 and n % bn == 0 and d % bk == 0, \
+        f"pad to blocks first: {(m, n, d)} vs {(bm, bn, bk)}"
+    nk = d // bk
+    grid = (m // bm, n // bn, nk)
+    return pl.pallas_call(
+        functools.partial(kernel, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bn, bk), lambda i, j, k: (j, k)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(q, x)

@@ -1,0 +1,75 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness references).
+
+Every kernel in this package must match its oracle to tolerance across a
+shape/dtype sweep (tests/test_kernels_*.py).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+_EPS = 1e-12
+
+
+def pairwise_l2_ref(q: Array, x: Array, *, squared: bool = False) -> Array:
+    """(Q, D), (N, D) -> (Q, N) Euclidean distances, f32 accumulation."""
+    q = q.astype(jnp.float32)
+    x = x.astype(jnp.float32)
+    qq = jnp.sum(q * q, -1)[:, None]
+    xx = jnp.sum(x * x, -1)[None, :]
+    d2 = jnp.maximum(qq + xx - 2.0 * (q @ x.T), 0.0)
+    return d2 if squared else jnp.sqrt(d2)
+
+
+def pairwise_cosine_ref(q: Array, x: Array) -> Array:
+    """sqrt(1 - cos) on raw vectors (wrapper normalises)."""
+    q = q.astype(jnp.float32)
+    x = x.astype(jnp.float32)
+    qn = q / jnp.maximum(jnp.linalg.norm(q, axis=-1, keepdims=True), _EPS)
+    xn = x / jnp.maximum(jnp.linalg.norm(x, axis=-1, keepdims=True), _EPS)
+    sim = jnp.clip(qn @ xn.T, -1.0, 1.0)
+    return jnp.sqrt(jnp.maximum(1.0 - sim, 0.0))
+
+
+def _h(v: Array) -> Array:
+    safe = jnp.where(v > _EPS, v, 1.0)
+    return jnp.where(v > _EPS, -safe * jnp.log2(safe), 0.0)
+
+
+def pairwise_jsd_ref(q: Array, x: Array) -> Array:
+    """sqrt(JSD) over probability rows."""
+    q = q.astype(jnp.float32)
+    x = x.astype(jnp.float32)
+    hq = jnp.sum(_h(q), -1)[:, None]
+    hx = jnp.sum(_h(x), -1)[None, :]
+    hqx = jnp.sum(_h(q[:, None, :] + x[None, :, :]), -1)
+    return jnp.sqrt(jnp.maximum(1.0 - 0.5 * (hq + hx - hqx), 0.0))
+
+
+def pairwise_triangular_ref(q: Array, x: Array) -> Array:
+    q = q.astype(jnp.float32)
+    x = x.astype(jnp.float32)
+    diff2 = (q[:, None, :] - x[None, :, :]) ** 2
+    den = q[:, None, :] + x[None, :, :]
+    terms = jnp.where(den > _EPS, diff2 / jnp.maximum(den, _EPS), 0.0)
+    return jnp.sqrt(jnp.maximum(jnp.sum(terms, -1), 0.0))
+
+
+def exclusion_margins_ref(q: Array, p1: Array, p2: Array, d12: Array
+                          ) -> tuple[Array, Array]:
+    """Fused partition-step oracle (Euclidean).
+
+    q: (Q, D); p1, p2: (P, D) pivot pairs; d12: (P,) build-time pivot
+    distances.  Returns (hyperbolic_margin, hilbert_margin), each (Q, P);
+    margin > t  =>  the p1 side of pair j is excludable for query i.
+    """
+    d1 = pairwise_l2_ref(q, p1)
+    d2 = pairwise_l2_ref(q, p2)
+    m_hyp = 0.5 * (d1 - d2)
+    safe = d12[None, :] > 1e-9
+    m_hil = jnp.where(
+        safe, (d1 * d1 - d2 * d2) / (2.0 * jnp.maximum(d12[None, :], _EPS)),
+        0.0)
+    return m_hyp, m_hil

@@ -1,0 +1,254 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production meshes and extract the roofline terms (DESIGN.md §6).
+
+  PYTHONPATH=src python -m repro.launch.dryrun --all
+  PYTHONPATH=src python -m repro.launch.dryrun --cell llama3.2-1b:train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod
+  PYTHONPATH=src python -m repro.launch.dryrun --report   # print table
+
+Results land incrementally in results/dryrun/<mesh>/<arch>__<shape>.json
+so a crash never loses completed cells.
+
+The XLA_FLAGS line above MUST run before any jax import (device count is
+locked at first backend init) — hence its position as line 1-2.
+"""
+
+import argparse          # noqa: E402
+import json              # noqa: E402
+import re                # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+
+import jax               # noqa: E402
+import numpy as np       # noqa: E402
+
+from repro.configs import ARCH_IDS, get            # noqa: E402
+from repro.launch import hloanalysis               # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.sharding.specs import named_sharding_tree  # noqa: E402
+
+# TPU v5e per-chip constants (targets; DESIGN.md §6)
+PEAK_FLOPS = 197e12        # bf16
+HBM_BW = 819e9             # bytes/s
+ICI_BW = 50e9              # bytes/s/link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter",
+                "all-to-all", "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Sum bytes over every tensor shape in an HLO result type string."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> dict:
+    """Per-collective-type result bytes (async ops counted at -start)."""
+    out = {c: 0 for c in _COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if "=" not in s:
+            continue
+        lhs, rhs = s.split("=", 1)
+        rhs = rhs.strip()
+        m = re.match(r"^(\([^)]*\)|\S+)\s+([\w-]+)", rhs)
+        if not m:
+            continue
+        opname = m.group(2)
+        for c in _COLLECTIVES:
+            if opname == c or opname == c + "-start":
+                out[c] += _shape_bytes(m.group(1))
+                out["count"] += 1
+                break
+    return out
+
+
+def run_cell(arch: str, shape: str, mesh, *, want_text: bool = False
+             ) -> dict:
+    mod = get(arch)
+    prog = mod.cell(shape, mesh)
+    in_sh = named_sharding_tree(mesh, prog.in_specs)
+    out_sh = named_sharding_tree(mesh, prog.out_specs) \
+        if prog.out_specs is not None else None
+
+    t0 = time.time()
+    jitted = jax.jit(prog.fn, in_shardings=in_sh, out_shardings=out_sh,
+                     donate_argnums=prog.donate)
+    lowered = jitted.lower(*prog.inputs)
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    cost = compiled.cost_analysis() or {}
+    try:
+        mem = compiled.memory_analysis()
+        mem_d = {
+            "argument_size": getattr(mem, "argument_size_in_bytes", None),
+            "output_size": getattr(mem, "output_size_in_bytes", None),
+            "temp_size": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code_size": getattr(
+                mem, "generated_code_size_in_bytes", None),
+        }
+    except Exception as e:   # backend may not support it
+        mem_d = {"error": str(e)}
+
+    hlo = compiled.as_text()
+    # loop-aware per-device analysis: while bodies scaled by trip count
+    # (xla cost_analysis counts them ONCE — useless for scan-based models)
+    la = hloanalysis.analyze(hlo)
+    flops = la["dot_flops"]
+    bytes_acc = la["traffic_bytes"]
+    coll_total = la["collective_bytes"]
+
+    t_compute = flops / PEAK_FLOPS
+    t_memory = bytes_acc / HBM_BW
+    t_coll = coll_total / ICI_BW
+    dominant = max(
+        [("compute", t_compute), ("memory", t_memory),
+         ("collective", t_coll)], key=lambda kv: kv[1])[0]
+
+    model_flops = prog.model_flops_per_step
+    res = {
+        "arch": arch, "shape": shape, "kind": prog.kind,
+        "mesh": "x".join(str(v) for v in mesh.shape.values()),
+        "n_chips": n_chips,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "flops_per_device": flops,
+        "bytes_per_device": bytes_acc,
+        "collective_bytes_per_device": coll_total,
+        "collectives": la["collectives"],
+        "xla_cost_analysis": {
+            "flops": float(cost.get("flops", 0.0)),
+            "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+        },
+        "memory_analysis": mem_d,
+        "roofline": {
+            "compute_s": t_compute,
+            "memory_s": t_memory,
+            "collective_s": t_coll,
+            "dominant": dominant,
+        },
+        "model_flops_per_step": model_flops,
+        "useful_flops_ratio": (
+            model_flops / (flops * n_chips)
+            if model_flops and flops else None),
+    }
+    if want_text:
+        res["hlo_size"] = len(hlo)
+    return res
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--cell", type=str, default=None,
+                    help="arch:shape")
+    ap.add_argument("--arch", type=str, default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", type=str, default="results/dryrun")
+    ap.add_argument("--report", action="store_true")
+    ap.add_argument("--skip-done", action="store_true")
+    args = ap.parse_args()
+
+    if args.report:
+        _report(args.out)
+        return
+
+    meshes = []
+    if args.both_meshes:
+        meshes = [False, True]
+    else:
+        meshes = [args.multi_pod]
+
+    cells = []
+    if args.cell:
+        a, s = args.cell.split(":")
+        cells = [(a, s)]
+    elif args.arch:
+        cells = [(args.arch, s) for s in get(args.arch).shapes()]
+    elif args.all:
+        for a in ARCH_IDS:
+            for s in get(a).shapes():
+                cells.append((a, s))
+    else:
+        ap.error("need --all, --arch or --cell")
+
+    for multi_pod in meshes:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        mesh_name = "2x16x16" if multi_pod else "16x16"
+        outdir = os.path.join(args.out, mesh_name)
+        os.makedirs(outdir, exist_ok=True)
+        for a, s in cells:
+            path = os.path.join(outdir, f"{a}__{s}.json")
+            if args.skip_done and os.path.exists(path):
+                print(f"[skip] {mesh_name} {a}:{s}")
+                continue
+            print(f"[cell] {mesh_name} {a}:{s} ...", flush=True)
+            try:
+                res = run_cell(a, s, mesh)
+                with open(path, "w") as f:
+                    json.dump(res, f, indent=1)
+                r = res["roofline"]
+                print(f"       ok compile={res['compile_s']}s "
+                      f"compute={r['compute_s']:.2e}s "
+                      f"memory={r['memory_s']:.2e}s "
+                      f"coll={r['collective_s']:.2e}s "
+                      f"dom={r['dominant']}", flush=True)
+            except Exception as e:
+                with open(path + ".err", "w") as f:
+                    f.write("".join(traceback.format_exception(e)))
+                print(f"       FAIL {type(e).__name__}: {e}", flush=True)
+
+
+def _report(outdir: str):
+    rows = []
+    for mesh_name in sorted(os.listdir(outdir)):
+        d = os.path.join(outdir, mesh_name)
+        if not os.path.isdir(d):
+            continue
+        for fn in sorted(os.listdir(d)):
+            if not fn.endswith(".json"):
+                continue
+            with open(os.path.join(d, fn)) as f:
+                rows.append(json.load(f))
+    hdr = (f"{'arch':24s} {'shape':14s} {'mesh':8s} {'compute':>10s} "
+           f"{'memory':>10s} {'collective':>10s} {'dom':>10s} "
+           f"{'useful%':>8s}")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in rows:
+        rf = r["roofline"]
+        u = r.get("useful_flops_ratio")
+        print(f"{r['arch']:24s} {r['shape']:14s} {r['mesh']:8s} "
+              f"{rf['compute_s']:10.3e} {rf['memory_s']:10.3e} "
+              f"{rf['collective_s']:10.3e} {rf['dominant']:>10s} "
+              f"{100 * u if u else 0:8.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Production mesh builders.
+
+IMPORTANT: functions, not module-level constants — importing this module
+never touches jax device state (smoke tests must keep seeing 1 CPU).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 (one 256-chip v5e pod) or 2x16x16 (two pods, 512 chips).
+
+    The single-pod mesh uses the first 256 of however many devices exist
+    (the dry-run forces 512 host devices); multi-pod uses all 512.
+    """
+    import jax
+
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = np.asarray(jax.devices()[:n]).reshape(shape)
+    return jax.sharding.Mesh(devices, axes)
+
+
+def make_debug_mesh(data: int = 1, model: int = 1):
+    """Tiny mesh for CPU tests (1..8 host devices)."""
+    import jax
+
+    devices = np.asarray(jax.devices()[:data * model]).reshape(data, model)
+    return jax.sharding.Mesh(devices, ("data", "model"))

@@ -1,0 +1,160 @@
+"""Training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b \
+      --steps 200 --reduced --ckpt-dir /tmp/ckpt
+
+--reduced runs the smoke-sized config (CPU-runnable, used by the
+examples and the end-to-end driver); the full config is what the
+dry-run lowers for the production meshes.  On a real cluster this same
+entry point runs under `jax.distributed.initialize()` with the
+production mesh (see repro.launch.mesh / dryrun for the sharding).
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get
+from repro.data import synthetic
+from repro.optim.adamw import AdamWConfig
+from repro.train.loop import TrainLoopConfig, train_loop
+
+
+def _lm_setup(mod, reduced: bool, batch: int, seq: int):
+    from repro.models import transformer as T
+    cfg = mod.reduced_config() if reduced else mod.full_config()
+
+    def loss_fn(params, b):
+        return T.loss_fn(params, cfg, b["tokens"], b["targets"])
+
+    def make_batch(step):
+        b = synthetic.token_batch(0, step, batch, seq, cfg.vocab)
+        return {k: jnp.asarray(v) for k, v in b.items()}
+
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    return params, loss_fn, make_batch
+
+
+def _recsys_setup(mod, reduced: bool, batch: int):
+    from repro.models import recsys as R
+    cfg = mod.reduced_config() if reduced else mod.full_config()
+    arch = mod.ARCH
+
+    if arch == "two-tower-retrieval":
+        def loss_fn(params, b):
+            return R.twotower_loss(params, cfg, b["user_ids"],
+                                   b["item_ids"])
+
+        def make_batch(step):
+            b = synthetic.retrieval_batch(
+                0, step, batch, cfg.n_user_feats, cfg.n_item_feats,
+                cfg.embed.vocab_sizes[0],
+                cfg.embed.vocab_sizes[cfg.n_user_feats])
+            return {k: jnp.asarray(v) for k, v in b.items()}
+
+        params = R.twotower_init(jax.random.PRNGKey(0), cfg)
+        return params, loss_fn, make_batch
+
+    fwd = {"dlrm-mlperf": R.dlrm_forward, "dcn-v2": R.dcn_forward}.get(arch)
+    if fwd is not None:
+        def loss_fn(params, b):
+            return R.bce_loss(fwd(params, cfg, b["dense"], b["sparse_ids"]),
+                              b["labels"])
+
+        def make_batch(step):
+            b = synthetic.click_batch(0, step, batch, cfg.n_dense,
+                                      cfg.embed.vocab_sizes)
+            return {k: jnp.asarray(v) for k, v in b.items()}
+
+        init = {"dlrm-mlperf": R.dlrm_init, "dcn-v2": R.dcn_init}[arch]
+        params = init(jax.random.PRNGKey(0), cfg)
+        return params, loss_fn, make_batch
+
+    # bst
+    def loss_fn(params, b):
+        return R.bce_loss(
+            R.bst_forward(params, cfg, b["hist_ids"], b["target_id"]),
+            b["labels"])
+
+    def make_batch(step):
+        b = synthetic.click_batch(0, step, batch, 1, (64,),
+                                  seq_len=cfg.seq_len)
+        out = {"hist_ids": jnp.asarray(b["hist_ids"]) %
+               cfg.embed.vocab_sizes[0],
+               "target_id": jnp.asarray(b["target_id"]) %
+               cfg.embed.vocab_sizes[0],
+               "labels": jnp.asarray(b["labels"])}
+        return out
+
+    params = R.bst_init(jax.random.PRNGKey(0), cfg)
+    return params, loss_fn, make_batch
+
+
+def _gnn_setup(mod, reduced: bool, batch: int):
+    from repro.models import gnn
+    cfg = mod.reduced_config() if reduced else mod.full_config()
+    g = synthetic.random_graph(0, 2000 if reduced else 100000,
+                               12000 if reduced else 800000, cfg.d_in,
+                               n_classes=cfg.n_classes)
+    x = jnp.asarray(g["x"])
+    src = jnp.asarray(g["src"])
+    dst = jnp.asarray(g["dst"])
+    labels = jnp.asarray(g["labels"])
+
+    def loss_fn(params, b):
+        del b
+        return gnn.loss_fn(params, cfg, x, src, dst, labels)
+
+    def make_batch(step):
+        return {"step": jnp.asarray(step)}
+
+    params = gnn.init_params(jax.random.PRNGKey(0), cfg)
+    return params, loss_fn, make_batch
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    args = ap.parse_args()
+
+    mod = get(args.arch)
+    fam = mod.FAMILY
+    if fam == "lm":
+        params, loss_fn, make_batch = _lm_setup(
+            mod, args.reduced, args.batch, args.seq)
+    elif fam == "recsys":
+        params, loss_fn, make_batch = _recsys_setup(
+            mod, args.reduced, args.batch)
+    elif fam == "gnn":
+        params, loss_fn, make_batch = _gnn_setup(
+            mod, args.reduced, args.batch)
+    else:
+        raise SystemExit(f"arch family {fam} is served, not trained "
+                         "(see repro.launch.serve)")
+
+    cfg = TrainLoopConfig(
+        total_steps=args.steps, ckpt_every=max(args.steps // 4, 1),
+        ckpt_dir=args.ckpt_dir, log_every=max(args.steps // 10, 1),
+        optimizer=AdamWConfig(lr=args.lr, warmup_steps=args.steps // 10,
+                              total_steps=args.steps))
+    params, _, hist = train_loop(loss_fn, params, make_batch, cfg)
+    for h in hist:
+        print(f"step {h['step']:5d}  loss {h['loss']:.4f}  "
+              f"gnorm {h['grad_norm']:.3f}  {h['sec']*1e3:.0f} ms")
+    first, last = hist[0]["loss"], hist[-1]["loss"]
+    print(f"loss {first:.4f} -> {last:.4f} "
+          f"({'improved' if last < first else 'NOT improved'})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from repro.models import layers, transformer, moe, gnn, recsys  # noqa: F401

@@ -1,0 +1,130 @@
+"""PNA (Principal Neighbourhood Aggregation, arXiv:2004.05718) in JAX.
+
+Message passing is segment-reduce over an edge list (JAX has no sparse
+SpMM for this: ``segment_sum``/``segment_max`` over edge-index gathers IS
+the implementation — kernel_taxonomy §GNN).
+
+Aggregators: mean / max / min / std;  scalers: identity / amplification
+log(d+1)/delta / attenuation delta/log(d+1)  (the paper's canonical set).
+
+Shapes served:
+  full_graph_sm / ogb_products : full-batch (N, E) arrays
+  minibatch_lg                 : padded sampled blocks from data.sampler
+  molecule                     : batched small graphs via graph_ids
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import truncated_normal
+
+Array = jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class PNAConfig:
+    name: str
+    n_layers: int = 4
+    d_hidden: int = 75
+    d_in: int = 1433
+    n_classes: int = 40
+    delta: float = 2.5            # avg log-degree normaliser
+    dtype: object = jnp.float32
+
+
+N_AGG = 4      # mean, max, min, std
+N_SCALE = 3    # id, amplification, attenuation
+
+
+def init_params(key, cfg: PNAConfig) -> dict:
+    ks = jax.random.split(key, 2 + cfg.n_layers * 2)
+    d, h = cfg.d_in, cfg.d_hidden
+    p = {"enc": truncated_normal(ks[0], (d, h), d ** -0.5, cfg.dtype),
+         "dec": truncated_normal(ks[1], (h, cfg.n_classes), h ** -0.5,
+                                 cfg.dtype),
+         "layers": []}
+    fan_in = h * (1 + N_AGG * N_SCALE)
+    for i in range(cfg.n_layers):
+        p["layers"].append({
+            "w_msg": truncated_normal(ks[2 + 2 * i], (2 * h, h),
+                                      (2 * h) ** -0.5, cfg.dtype),
+            "w_upd": truncated_normal(ks[3 + 2 * i], (fan_in, h),
+                                      fan_in ** -0.5, cfg.dtype),
+        })
+    return p
+
+
+def _aggregate(msg: Array, dst: Array, n_nodes: int) -> tuple[Array, Array]:
+    """msg (E, H) scattered to dst -> (agg (N, 4H), degree (N,))."""
+    ones = jnp.ones((msg.shape[0],), msg.dtype)
+    deg = jax.ops.segment_sum(ones, dst, n_nodes)
+    deg_safe = jnp.maximum(deg, 1.0)
+
+    s = jax.ops.segment_sum(msg, dst, n_nodes)
+    mean = s / deg_safe[:, None]
+    mx = jax.ops.segment_max(msg, dst, n_nodes)
+    mx = jnp.where(jnp.isfinite(mx), mx, 0.0)
+    mn = -jax.ops.segment_max(-msg, dst, n_nodes)
+    mn = jnp.where(jnp.isfinite(mn), mn, 0.0)
+    s2 = jax.ops.segment_sum(msg * msg, dst, n_nodes)
+    var = jnp.maximum(s2 / deg_safe[:, None] - mean * mean, 0.0)
+    std = jnp.sqrt(var + 1e-8)
+    return jnp.concatenate([mean, mx, mn, std], axis=-1), deg
+
+
+def _scale(agg: Array, deg: Array, delta: float) -> Array:
+    """(N, 4H) -> (N, 12H) with identity/amplify/attenuate scalers."""
+    logd = jnp.log1p(deg)[:, None]
+    amp = logd / delta
+    att = delta / jnp.maximum(logd, 1e-6)
+    return jnp.concatenate([agg, agg * amp, agg * att], axis=-1)
+
+
+def forward(params: dict, cfg: PNAConfig, x: Array, src: Array, dst: Array,
+            edge_mask: Optional[Array] = None,
+            graph_ids: Optional[Array] = None,
+            n_graphs: int = 0) -> Array:
+    """x: (N, d_in); src/dst: (E,) int32; edge_mask: (E,) for padded
+    minibatch blocks.  graph_ids + n_graphs: per-graph pooling (molecule
+    cells) — else returns per-node logits.
+    """
+    n = x.shape[0]
+    h = x.astype(cfg.dtype) @ params["enc"]
+    for lp in params["layers"]:
+        hs = h[src]
+        hd = h[dst]
+        msg = jax.nn.relu(
+            jnp.concatenate([hs, hd], axis=-1) @ lp["w_msg"])
+        if edge_mask is not None:
+            msg = msg * edge_mask[:, None].astype(msg.dtype)
+            dst_eff = jnp.where(edge_mask, dst, n)   # scatter pad -> bin n
+        else:
+            dst_eff = dst
+        agg, deg = _aggregate(msg, dst_eff, n + 1)
+        agg, deg = agg[:n], deg[:n]
+        feats = jnp.concatenate([h, _scale(agg, deg, cfg.delta)], axis=-1)
+        h = jax.nn.relu(feats @ lp["w_upd"]) + h     # residual
+    if graph_ids is not None:
+        pooled = jax.ops.segment_sum(h, graph_ids, n_graphs)
+        cnt = jax.ops.segment_sum(jnp.ones((n,), h.dtype), graph_ids,
+                                  n_graphs)
+        h = pooled / jnp.maximum(cnt, 1.0)[:, None]
+    return h @ params["dec"]
+
+
+def loss_fn(params: dict, cfg: PNAConfig, x, src, dst, labels,
+            edge_mask=None, label_mask=None, graph_ids=None,
+            n_graphs: int = 0) -> Array:
+    logits = forward(params, cfg, x, src, dst, edge_mask, graph_ids,
+                     n_graphs)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], -1)[..., 0]
+    if label_mask is not None:
+        return jnp.sum(nll * label_mask) / jnp.maximum(
+            jnp.sum(label_mask), 1.0)
+    return jnp.mean(nll)

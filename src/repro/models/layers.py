@@ -1,0 +1,213 @@
+"""Shared neural layers (pure JAX, param pytrees, no framework deps).
+
+Conventions:
+  * params are nested dicts of jnp arrays; init fns return the pytree.
+  * per-layer weights are STACKED on a leading L axis and consumed by
+    lax.scan — keeps HLO size O(1) in depth (critical for the 96-layer
+    dry-runs) and is the idiomatic production layout.
+  * compute dtype bf16, params f32 (cast on use), f32 softmax/norms.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.specs import BATCH, constrain, ctx_flag
+
+Array = jnp.ndarray
+
+
+def truncated_normal(key, shape, scale, dtype=jnp.float32):
+    return scale * jax.random.truncated_normal(key, -2.0, 2.0, shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms / activations
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: Array, gamma: Array, eps: float = 1e-6) -> Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * gamma).astype(x.dtype)
+
+
+def activation(name: str):
+    if name == "silu":
+        return jax.nn.silu
+    if name == "gelu":
+        return jax.nn.gelu
+    if name == "relu":
+        return jax.nn.relu
+    if name == "squared_relu":           # Primer / nemotron-4
+        return lambda x: jnp.square(jax.nn.relu(x))
+    raise KeyError(name)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(d_head: int, theta: float = 10000.0) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32)
+                            / d_head))
+
+
+def apply_rope(x: Array, positions: Array, theta: float = 10000.0) -> Array:
+    """x: (..., S, H, dh); positions: (..., S) int32."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                       # (dh/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, dh/2)
+    cos = jnp.cos(ang)[..., None, :]                    # (..., S, 1, dh/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos],
+                          axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention (GQA; flash-style scan for train/prefill; cache for decode)
+# ---------------------------------------------------------------------------
+
+def _repeat_kv(k: Array, groups: int) -> Array:
+    """(B, S, Hkv, dh) -> (B, S, Hkv*groups, dh) by head repetition."""
+    if groups == 1:
+        return k
+    b, s, h, dh = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, h, groups, dh)) \
+        .reshape(b, s, h * groups, dh)
+
+
+def flash_attention(q: Array, k: Array, v: Array, *, causal: bool,
+                    block: int = 1024) -> Array:
+    """Online-softmax attention, scanned over KV blocks.
+
+    q: (B, Sq, H, dh); k, v: (B, Sk, Hkv, dh); GQA via head repetition of
+    the (small) K/V blocks inside the loop.  Memory per step is
+    O(B*H*Sq*block) instead of O(B*H*Sq*Sk).  Each block step is
+    checkpointed so scan's backward recomputes rather than storing block
+    scores.
+    """
+    b, sq, h, dh = q.shape
+    _, sk, hkv, _ = k.shape
+    groups = h // hkv
+    scale = 1.0 / (dh ** 0.5)
+    sk_pad = ((sk + block - 1) // block) * block
+    if sk_pad != sk:
+        k = jnp.pad(k, ((0, 0), (0, sk_pad - sk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, sk_pad - sk), (0, 0), (0, 0)))
+    nblk = sk_pad // block
+
+    qf = (q * scale).astype(jnp.float32)
+    kb = k.reshape(b, nblk, block, hkv, dh)
+    vb = v.reshape(b, nblk, block, hkv, dh)
+    q_pos = jnp.arange(sq)
+
+    def step(carry, xs):
+        acc, m, l = carry
+        kv_idx, k_blk, v_blk = xs
+        k_blk = _repeat_kv(k_blk, groups).astype(jnp.float32)
+        v_blk = _repeat_kv(v_blk, groups).astype(jnp.float32)
+        s = jnp.einsum("bqhd,bkhd->bhqk", qf, k_blk)     # (B, H, Sq, blk)
+        k_pos = kv_idx * block + jnp.arange(block)
+        if causal:
+            mask = (q_pos[:, None] >= k_pos[None, :]) \
+                & (k_pos < sk)[None, :]
+            s = jnp.where(mask[None, None], s, -jnp.inf)
+        elif sk_pad != sk:
+            s = jnp.where((k_pos < sk)[None, None, None, :], s, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        # guard -inf rows (fully masked block): exp(-inf - -inf) -> 0
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(jnp.isfinite(s), p, 0.0)
+        alpha = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p, v_blk)
+        return (acc_new, m_new, l_new), None
+
+    # anchor the scan-carry sharding: batch over the data axes, heads over
+    # "model" (GSPMD's fixpoint otherwise replicates batch inside the
+    # layer scan — measured 16x attention memory on the 16x16 mesh)
+    acc0 = constrain(jnp.zeros((b, h, sq, dh), jnp.float32),
+                     BATCH, "model", None, None)
+    m0 = constrain(jnp.full((b, h, sq), -jnp.inf, jnp.float32),
+                   BATCH, "model", None)
+    l0 = constrain(jnp.zeros((b, h, sq), jnp.float32),
+                   BATCH, "model", None)
+    (acc, m, l), _ = jax.lax.scan(
+        jax.checkpoint(step), (acc0, m0, l0),
+        (jnp.arange(nblk), jnp.moveaxis(kb, 1, 0), jnp.moveaxis(vb, 1, 0)))
+    out = acc / jnp.maximum(l[..., None], 1e-20)
+    return jnp.einsum("bhqd->bqhd", out).astype(q.dtype)
+
+
+def decode_attention(q: Array, k_cache: Array, v_cache: Array,
+                     cache_len: Array) -> Array:
+    """Single-token attention against a cache.
+
+    q: (B, 1, H, dh); caches: (B, S, Hkv, dh); cache_len: () or (B,) valid
+    prefix length.  O(S) — this is what makes `long_500k` decode cells
+    runnable for full-attention archs (DESIGN.md §4).
+    """
+    b, _, h, dh = q.shape
+    _, s, hkv, _ = k_cache.shape
+    groups = h // hkv
+    scale = 1.0 / (dh ** 0.5)
+    kf = _repeat_kv(k_cache, groups).astype(jnp.float32)
+    vf = _repeat_kv(v_cache, groups).astype(jnp.float32)
+    qf = (q[:, 0] * scale).astype(jnp.float32)            # (B, H, dh)
+    scores = jnp.einsum("bhd,bshd->bhs", qf, kf)
+    # long-context decode: cache (and thus scores) sequence-sharded over
+    # the data axes (flash-decoding); 32k decode: batch-sharded.
+    if ctx_flag("long_context", False):
+        scores = constrain(scores, None, "model", BATCH)
+    else:
+        scores = constrain(scores, BATCH, "model", None)
+    pos = jnp.arange(s)
+    valid = pos[None, :] < jnp.reshape(cache_len, (-1, 1))
+    scores = jnp.where(valid[:, None, :], scores, -jnp.inf)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhs,bshd->bhd", p, vf)
+    return out[:, None].astype(q.dtype)                   # (B, 1, H, dh)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, n_layers: int, d_model: int, d_ff: int, *,
+             gated: bool, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 3)
+    scale_in = d_model ** -0.5
+    scale_out = d_ff ** -0.5
+    p = {
+        "w_up": truncated_normal(ks[0], (n_layers, d_model, d_ff),
+                                 scale_in, dtype),
+        "w_down": truncated_normal(ks[1], (n_layers, d_ff, d_model),
+                                   scale_out, dtype),
+    }
+    if gated:
+        p["w_gate"] = truncated_normal(ks[2], (n_layers, d_model, d_ff),
+                                       scale_in, dtype)
+    return p
+
+
+def mlp_apply(p_layer: dict, x: Array, act_name: str) -> Array:
+    """p_layer: single-layer slice (no leading L)."""
+    act = activation(act_name)
+    up = x @ p_layer["w_up"].astype(x.dtype)
+    if "w_gate" in p_layer:
+        gate = act(x @ p_layer["w_gate"].astype(x.dtype))
+        hidden = gate * up
+    else:
+        hidden = act(up)
+    if hidden.ndim == 3:
+        hidden = constrain(hidden, BATCH, None, "model")
+    return hidden @ p_layer["w_down"].astype(x.dtype)

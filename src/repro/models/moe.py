@@ -1,0 +1,202 @@
+"""Mixture-of-Experts layer: top-k token-choice routing with grouped
+GShard-style capacity dispatch (einsum form — MXU-friendly and
+GSPMD-shardable; the production TPU layout).
+
+Sharding (DESIGN.md §4):
+  * expert-parallel when n_experts % model_axis == 0 (qwen3: 128/16=8
+    experts per shard) — expert dim of w1/w2/w3 carries the "model" axis;
+  * tensor-parallel experts otherwise (granite-moe: 40 experts, d_ff
+    split over "model") — zero padding, zero waste.
+The same einsum code serves both; only the PartitionSpecs differ.
+
+Tokens are processed in groups (scan) so the (Tg, E, C) dispatch one-hots
+stay VMEM/HBM-bounded for 1M-token batches.  Router in f32; aux
+load-balancing loss (Switch) returned for the train loss.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import activation, truncated_normal
+from repro.sharding.specs import BATCH, constrain, ctx_flag
+
+Array = jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_model: int
+    d_ff: int                  # per-expert hidden
+    capacity_factor: float = 1.25
+    group_size: int = 4096     # tokens per dispatch group
+    gated: bool = True         # SwiGLU experts
+    act: str = "silu"
+    dispatch: str = "einsum"   # "einsum" (GShard one-hots) | "scatter"
+    #                            (§Perf: kills the (Tg,E,C) masks)
+
+
+def init_moe(key, n_layers: int, cfg: MoEConfig, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 4)
+    si, so = cfg.d_model ** -0.5, cfg.d_ff ** -0.5
+    p = {
+        "router": truncated_normal(
+            ks[0], (n_layers, cfg.d_model, cfg.n_experts), si, jnp.float32),
+        "w_up": truncated_normal(
+            ks[1], (n_layers, cfg.n_experts, cfg.d_model, cfg.d_ff), si,
+            dtype),
+        "w_down": truncated_normal(
+            ks[2], (n_layers, cfg.n_experts, cfg.d_ff, cfg.d_model), so,
+            dtype),
+    }
+    if cfg.gated:
+        p["w_gate"] = truncated_normal(
+            ks[3], (n_layers, cfg.n_experts, cfg.d_model, cfg.d_ff), si,
+            dtype)
+    return p
+
+
+def _capacity(cfg: MoEConfig, tokens_per_group: int) -> int:
+    c = int(tokens_per_group * cfg.top_k * cfg.capacity_factor
+            // cfg.n_experts)
+    return max(c, cfg.top_k)
+
+
+def moe_apply(p_layer: dict, x: Array, cfg: MoEConfig
+              ) -> tuple[Array, Array]:
+    """x: (T, D) tokens -> (out (T, D), aux_loss ()).
+
+    Grouped dispatch: reshape (G, Tg, D), scan groups; per group build
+    top-k one-hot dispatch/combine tensors (Tg, E, C) and run experts as
+    batched einsums.  Tokens over capacity are DROPPED (residual carries
+    them — standard GShard semantics).
+    """
+    t, d = x.shape
+    tg = min(cfg.group_size, t)
+    assert t % tg == 0, (t, tg)
+    g = t // tg
+    cap = _capacity(cfg, tg)
+    xg = x.reshape(g, tg, d)
+
+    router = p_layer["router"].astype(jnp.float32)
+    w_up = p_layer["w_up"]
+    w_down = p_layer["w_down"]
+    w_gate = p_layer.get("w_gate")
+    act = activation(cfg.act)
+
+    def group_step(_, xt):
+        # ---- routing (f32) -------------------------------------------------
+        logits = xt.astype(jnp.float32) @ router          # (Tg, E)
+        probs = jax.nn.softmax(logits, axis=-1)
+        topw, topi = jax.lax.top_k(probs, cfg.top_k)      # (Tg, k)
+        topw = topw / jnp.maximum(
+            jnp.sum(topw, axis=-1, keepdims=True), 1e-9)
+
+        # aux load-balance loss (Switch eq. 4-6)
+        me = jnp.mean(probs, axis=0)                              # (E,)
+        ce = jnp.mean(
+            jax.nn.one_hot(topi[:, 0], cfg.n_experts, dtype=jnp.float32),
+            axis=0)
+        aux = cfg.n_experts * jnp.sum(me * ce)
+
+        if cfg.dispatch == "scatter":
+            return None, _scatter_group(cfg, xt, topw, topi, cap,
+                                        w_up, w_down, w_gate, act, aux)
+
+        # ---- capacity assignment ------------------------------------------
+        # position of each (token, slot) within its expert, in routing
+        # priority order (top-1 slots first — GShard convention).
+        # Masks are built in the COMPUTE dtype (bf16): every (e, c) slot
+        # receives exactly one token, so the dispatch/combine einsums
+        # have single-term sums — bf16 masks are exact and halve the
+        # dominant (Tg, E, C) traffic (§Perf iteration).
+        mdt = xt.dtype
+        disp = jnp.zeros((tg, cfg.n_experts, cap), mdt)
+        comb = jnp.zeros((tg, cfg.n_experts, cap), mdt)
+        fill = jnp.zeros((cfg.n_experts,), jnp.int32)
+        for slot in range(cfg.top_k):
+            e = topi[:, slot]                                     # (Tg,)
+            onehot = jax.nn.one_hot(e, cfg.n_experts, dtype=jnp.int32)
+            pos = fill[None, :] + jnp.cumsum(onehot, axis=0) - onehot
+            ppos = jnp.sum(pos * onehot, axis=-1)                 # (Tg,)
+            keep = ppos < cap
+            slot_disp = (
+                jax.nn.one_hot(e, cfg.n_experts, dtype=mdt)[:, :, None]
+                * jax.nn.one_hot(ppos, cap, dtype=mdt)[:, None, :]
+                * keep[:, None, None].astype(mdt))
+            disp = disp + slot_disp
+            comb = comb + slot_disp * topw[:, slot][:, None, None] \
+                .astype(mdt)
+            fill = fill + jnp.sum(onehot, axis=0)
+
+        # ---- expert compute -------------------------------------------
+        # EP: experts over "model" (dispatch einsum = the all-to-all);
+        # TP: per-expert ffn dim over "model".
+        ep = ctx_flag("moe_ep")
+        xe = jnp.einsum("tec,td->ecd", disp, xt)
+        if ep is True:
+            xe = constrain(xe, "model", None, None)
+        up = jnp.einsum("ecd,edf->ecf", xe, w_up.astype(xt.dtype))
+        if w_gate is not None:
+            gate = act(jnp.einsum("ecd,edf->ecf", xe,
+                                  w_gate.astype(xt.dtype)))
+            hidden = gate * up
+        else:
+            hidden = act(up)
+        if ep is True:
+            hidden = constrain(hidden, "model", None, None)
+        elif ep is False:
+            hidden = constrain(hidden, None, None, "model")
+        ye = jnp.einsum("ecf,efd->ecd", hidden, w_down.astype(xt.dtype))
+        yt = jnp.einsum("tec,ecd->td", comb, ye)
+        yt = constrain(yt, BATCH, None)
+        return None, (yt, aux)
+
+    _, (yg, auxes) = jax.lax.scan(group_step, None, xg)
+    return yg.reshape(t, d), jnp.mean(auxes)
+
+
+def _scatter_group(cfg: MoEConfig, xt: Array, topw: Array, topi: Array,
+                   cap: int, w_up, w_down, w_gate, act, aux):
+    """Scatter/gather dispatch (§Perf): no (Tg, E, C) one-hot masks.
+
+    Position-in-expert via a single (k*Tg, E) int32 cumsum in slot-major
+    order (top-1 assignments claim capacity first — GShard priority);
+    dispatch is a scatter-add into (E, C, D); combine is a gather +
+    segment-sum.  Traffic per group: O(k*Tg*D + E*C*D) instead of
+    O(k*Tg*E*C).
+    """
+    tg, d = xt.shape
+    k = cfg.top_k
+    e_flat = topi.T.reshape(-1)                       # (k*Tg,) slot-major
+    w_flat = topw.T.reshape(-1)
+    tok_flat = jnp.tile(jnp.arange(tg, dtype=jnp.int32), k)
+
+    onehot = jax.nn.one_hot(e_flat, cfg.n_experts, dtype=jnp.int32)
+    pos = jnp.cumsum(onehot, axis=0) - onehot         # (kTg, E)
+    ppos = jnp.sum(pos * onehot, axis=-1)             # (kTg,)
+    keep = ppos < cap
+    ppos_c = jnp.where(keep, ppos, cap - 1)
+
+    rows = xt[tok_flat] * (keep.astype(xt.dtype))[:, None]
+    x_disp = jnp.zeros((cfg.n_experts, cap, d), xt.dtype)
+    x_disp = x_disp.at[e_flat, ppos_c].add(rows, mode="drop")
+
+    up = jnp.einsum("ecd,edf->ecf", x_disp, w_up.astype(xt.dtype))
+    if w_gate is not None:
+        gate = act(jnp.einsum("ecd,edf->ecf", x_disp,
+                              w_gate.astype(xt.dtype)))
+        hidden = gate * up
+    else:
+        hidden = act(up)
+    ye = jnp.einsum("ecf,efd->ecd", hidden, w_down.astype(xt.dtype))
+
+    y_rows = ye[e_flat, ppos_c] * (w_flat * keep).astype(xt.dtype)[:, None]
+    yt = jax.ops.segment_sum(y_rows, tok_flat, tg)
+    yt = constrain(yt.astype(xt.dtype), BATCH, None)
+    return yt, aux

@@ -1,0 +1,330 @@
+"""RecSys model zoo: DLRM, DCN-v2, BST, two-tower retrieval.
+
+The embedding LOOKUP is the hot path; JAX has no nn.EmbeddingBag, so
+``embedding_bag`` here (jnp.take + segment-style reduction) IS the
+substrate (kernel_taxonomy §RecSys).  Tables are a single fused row
+space (per-feature offsets) so one gather serves all 26 features and
+sharding the row dim distributes the whole embedding memory.
+
+Serving paths:
+  serve_p99 / serve_bulk : plain forward at batch 512 / 262144
+  retrieval_cand         : 1 query vs 10^6 candidates — batched dot
+                           (two-tower) or batched forward (CTR models);
+                           optionally backed by repro.core metric search
+                           over d_cos (the paper's technique).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import truncated_normal
+
+Array = jnp.ndarray
+
+
+# ---------------------------------------------------------------------------
+# embedding substrate
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class EmbeddingSpec:
+    vocab_sizes: tuple[int, ...]     # rows per sparse feature
+    dim: int
+    row_pad: int = 512               # pad total rows so the fused table
+    #                                  shards over any <=512-chip mesh
+
+    @property
+    def total_rows(self) -> int:
+        n = sum(self.vocab_sizes)
+        return ((n + self.row_pad - 1) // self.row_pad) * self.row_pad
+
+    @property
+    def offsets(self) -> tuple[int, ...]:
+        out, acc = [], 0
+        for v in self.vocab_sizes:
+            out.append(acc)
+            acc += v
+        return tuple(out)
+
+
+def init_embedding(key, spec: EmbeddingSpec, dtype=jnp.float32) -> Array:
+    return truncated_normal(key, (spec.total_rows, spec.dim),
+                            spec.dim ** -0.5, dtype)
+
+
+def embedding_lookup(table: Array, spec: EmbeddingSpec,
+                     sparse_ids: Array, feat_offset: int = 0) -> Array:
+    """sparse_ids: (B, F) per-feature local ids -> (B, F, dim).
+
+    One fused gather over the offset row space (= EmbeddingBag with one
+    id per bag; multi-id bags below).  ``feat_offset`` selects which
+    slice of the spec's features these columns correspond to (e.g. the
+    item-tower features of a shared two-tower table)."""
+    f = sparse_ids.shape[1]
+    offsets = jnp.asarray(spec.offsets[feat_offset:feat_offset + f],
+                          jnp.int32)
+    rows = sparse_ids + offsets[None, :]
+    return jnp.take(table, rows, axis=0)
+
+
+def embedding_bag(table: Array, ids: Array, bag_ids: Array, n_bags: int,
+                  *, combiner: str = "sum") -> Array:
+    """EmbeddingBag: ids (K,) row ids, bag_ids (K,) target bag -> (n_bags,
+    dim) via gather + segment_sum (mean optional)."""
+    gathered = jnp.take(table, ids, axis=0)
+    summed = jax.ops.segment_sum(gathered, bag_ids, n_bags)
+    if combiner == "mean":
+        cnt = jax.ops.segment_sum(jnp.ones_like(ids, table.dtype), bag_ids,
+                                  n_bags)
+        summed = summed / jnp.maximum(cnt, 1.0)[:, None]
+    return summed
+
+
+def _mlp_init(key, sizes: Sequence[int], dtype) -> list[dict]:
+    ks = jax.random.split(key, len(sizes) - 1)
+    return [{"w": truncated_normal(ks[i], (sizes[i], sizes[i + 1]),
+                                   sizes[i] ** -0.5, dtype),
+             "b": jnp.zeros((sizes[i + 1],), dtype)}
+            for i in range(len(sizes) - 1)]
+
+
+def _mlp_apply(mlp: list[dict], x: Array, final_act: bool = False) -> Array:
+    for i, lp in enumerate(mlp):
+        x = x @ lp["w"] + lp["b"]
+        if i < len(mlp) - 1 or final_act:
+            x = jax.nn.relu(x)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# DLRM (arXiv:1906.00091, MLPerf config)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DLRMConfig:
+    name: str
+    n_dense: int = 13
+    embed: EmbeddingSpec = EmbeddingSpec((), 128)
+    bot_mlp: tuple[int, ...] = (13, 512, 256, 128)
+    top_mlp: tuple[int, ...] = (1024, 1024, 512, 256, 1)
+    dtype: object = jnp.float32
+
+    @property
+    def n_sparse(self) -> int:
+        return len(self.embed.vocab_sizes)
+
+
+def dlrm_init(key, cfg: DLRMConfig) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    n_f = cfg.n_sparse + 1
+    n_inter = n_f * (n_f - 1) // 2
+    top_in = cfg.embed.dim + n_inter
+    return {
+        "table": init_embedding(k1, cfg.embed, cfg.dtype),
+        "bot": _mlp_init(k2, cfg.bot_mlp, cfg.dtype),
+        "top": _mlp_init(k3, (top_in,) + cfg.top_mlp[1:], cfg.dtype),
+    }
+
+
+def dlrm_forward(params: dict, cfg: DLRMConfig, dense: Array,
+                 sparse_ids: Array) -> Array:
+    """dense: (B, 13) f32; sparse_ids: (B, 26) -> (B,) logits."""
+    b = dense.shape[0]
+    z = _mlp_apply(params["bot"], dense.astype(cfg.dtype), final_act=True)
+    emb = embedding_lookup(params["table"], cfg.embed, sparse_ids)
+    feats = jnp.concatenate([z[:, None, :], emb], axis=1)   # (B, 27, dim)
+    inter = jnp.einsum("bfd,bgd->bfg", feats, feats)
+    iu, ju = jnp.triu_indices(feats.shape[1], k=1)
+    flat = inter[:, iu, ju]                                  # (B, 351)
+    top_in = jnp.concatenate([z, flat], axis=-1)
+    return _mlp_apply(params["top"], top_in)[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# DCN-v2 (arXiv:2008.13535)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DCNConfig:
+    name: str
+    n_dense: int = 13
+    embed: EmbeddingSpec = EmbeddingSpec((), 16)
+    n_cross: int = 3
+    mlp: tuple[int, ...] = (1024, 1024, 512)
+    dtype: object = jnp.float32
+
+
+def dcn_init(key, cfg: DCNConfig) -> dict:
+    d0 = cfg.n_dense + len(cfg.embed.vocab_sizes) * cfg.embed.dim
+    ks = jax.random.split(key, 3 + cfg.n_cross)
+    p = {
+        "table": init_embedding(ks[0], cfg.embed, cfg.dtype),
+        "cross": [{"w": truncated_normal(ks[1 + i], (d0, d0), d0 ** -0.5,
+                                         cfg.dtype),
+                   "b": jnp.zeros((d0,), cfg.dtype)}
+                  for i in range(cfg.n_cross)],
+        "mlp": _mlp_init(ks[-2], (d0,) + cfg.mlp, cfg.dtype),
+        "head": truncated_normal(ks[-1], (cfg.mlp[-1], 1),
+                                 cfg.mlp[-1] ** -0.5, cfg.dtype),
+    }
+    return p
+
+
+def dcn_forward(params: dict, cfg: DCNConfig, dense: Array,
+                sparse_ids: Array) -> Array:
+    emb = embedding_lookup(params["table"], cfg.embed, sparse_ids)
+    x0 = jnp.concatenate(
+        [dense.astype(cfg.dtype), emb.reshape(emb.shape[0], -1)], axis=-1)
+    x = x0
+    for lp in params["cross"]:
+        x = x0 * (x @ lp["w"] + lp["b"]) + x       # DCN-v2 cross
+    h = _mlp_apply(params["mlp"], x, final_act=True)
+    return (h @ params["head"])[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# BST (arXiv:1905.06874)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class BSTConfig:
+    name: str
+    embed: EmbeddingSpec = EmbeddingSpec((), 32)   # item vocab in [0]
+    seq_len: int = 20
+    n_heads: int = 8
+    n_blocks: int = 1
+    mlp: tuple[int, ...] = (1024, 512, 256)
+    dtype: object = jnp.float32
+
+
+def bst_init(key, cfg: BSTConfig) -> dict:
+    d = cfg.embed.dim
+    ks = jax.random.split(key, 8)
+    blocks = []
+    for i in range(cfg.n_blocks):
+        kk = jax.random.split(ks[2 + i], 5)
+        blocks.append({
+            "wq": truncated_normal(kk[0], (d, d), d ** -0.5, cfg.dtype),
+            "wk": truncated_normal(kk[1], (d, d), d ** -0.5, cfg.dtype),
+            "wv": truncated_normal(kk[2], (d, d), d ** -0.5, cfg.dtype),
+            "wo": truncated_normal(kk[3], (d, d), d ** -0.5, cfg.dtype),
+            "ff1": truncated_normal(kk[4], (d, 4 * d), d ** -0.5, cfg.dtype),
+            "ff2": truncated_normal(kk[4], (4 * d, d), (4 * d) ** -0.5,
+                                    cfg.dtype),
+        })
+    # target item + sequence, flattened into the MLP
+    mlp_in = (cfg.seq_len + 1) * d
+    return {
+        "table": init_embedding(ks[0], cfg.embed, cfg.dtype),
+        "pos": truncated_normal(ks[1], (cfg.seq_len + 1, d), 0.02,
+                                cfg.dtype),
+        "blocks": blocks,
+        "mlp": _mlp_init(ks[-1], (mlp_in,) + cfg.mlp + (1,), cfg.dtype),
+    }
+
+
+def bst_forward(params: dict, cfg: BSTConfig, hist_ids: Array,
+                target_id: Array) -> Array:
+    """hist_ids: (B, seq) item ids; target_id: (B,) -> (B,) logits."""
+    d = cfg.embed.dim
+    hseq = jnp.take(params["table"], hist_ids, axis=0)       # (B, S, d)
+    tgt = jnp.take(params["table"], target_id, axis=0)[:, None]
+    x = jnp.concatenate([hseq, tgt], axis=1) + params["pos"][None]
+    b, s, _ = x.shape
+    nh, dh = cfg.n_heads, d // cfg.n_heads
+    for blk in params["blocks"]:
+        q = (x @ blk["wq"]).reshape(b, s, nh, dh)
+        k = (x @ blk["wk"]).reshape(b, s, nh, dh)
+        v = (x @ blk["wv"]).reshape(b, s, nh, dh)
+        scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) / (dh ** 0.5)
+        p = jax.nn.softmax(scores.astype(jnp.float32), -1).astype(x.dtype)
+        attn = jnp.einsum("bhqk,bkhd->bqhd", p, v).reshape(b, s, d)
+        x = x + attn @ blk["wo"]
+        x = x + jax.nn.relu(x @ blk["ff1"]) @ blk["ff2"]
+    return _mlp_apply(params["mlp"], x.reshape(b, -1))[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# Two-tower retrieval (YouTube/RecSys'19 style)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TwoTowerConfig:
+    name: str
+    embed: EmbeddingSpec = EmbeddingSpec((), 256)  # [user_vocab, item_vocab]
+    n_user_feats: int = 8
+    n_item_feats: int = 4
+    tower_mlp: tuple[int, ...] = (1024, 512, 256)
+    dtype: object = jnp.float32
+
+
+def twotower_init(key, cfg: TwoTowerConfig) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    d = cfg.embed.dim
+    return {
+        "table": init_embedding(k1, cfg.embed, cfg.dtype),
+        "user": _mlp_init(k2, (cfg.n_user_feats * d,) + cfg.tower_mlp,
+                          cfg.dtype),
+        "item": _mlp_init(k3, (cfg.n_item_feats * d,) + cfg.tower_mlp,
+                          cfg.dtype),
+    }
+
+
+def _tower(mlp, emb: Array) -> Array:
+    out = _mlp_apply(mlp, emb.reshape(emb.shape[0], -1))
+    return out / jnp.maximum(
+        jnp.linalg.norm(out, axis=-1, keepdims=True), 1e-6)
+
+
+def user_embed(params: dict, cfg: TwoTowerConfig, user_ids: Array) -> Array:
+    emb = embedding_lookup(params["table"], cfg.embed, user_ids)
+    return _tower(params["user"], emb)
+
+
+def item_embed(params: dict, cfg: TwoTowerConfig, item_ids: Array) -> Array:
+    emb = embedding_lookup(params["table"], cfg.embed, item_ids,
+                           feat_offset=cfg.n_user_feats)
+    return _tower(params["item"], emb)
+
+
+def twotower_scores(params: dict, cfg: TwoTowerConfig, user_ids: Array,
+                    item_ids: Array) -> Array:
+    """In-batch scoring matrix (B_u, B_i) of dot products."""
+    u = user_embed(params, cfg, user_ids)
+    it = item_embed(params, cfg, item_ids)
+    return u @ it.T
+
+
+def twotower_loss(params: dict, cfg: TwoTowerConfig, user_ids: Array,
+                  item_ids: Array, temp: float = 0.05) -> Array:
+    """In-batch sampled softmax (diagonal positives)."""
+    s = twotower_scores(params, cfg, user_ids, item_ids) / temp
+    logp = jax.nn.log_softmax(s.astype(jnp.float32), axis=-1)
+    return -jnp.mean(jnp.diagonal(logp))
+
+
+def retrieval_scores(params: dict, cfg: TwoTowerConfig, user_ids: Array,
+                     cand_vectors: Array, k: int = 100
+                     ) -> tuple[Array, Array]:
+    """retrieval_cand cell: 1 (or few) queries vs n_candidates
+    precomputed item vectors -> top-k (scores, ids).  Batched dot, never
+    a loop.  For the metric-index backend see repro.core.bruteforce /
+    tree: d_cos = sqrt(1 - dot) is rank-equivalent and four-point (paper
+    §5.5)."""
+    u = user_embed(params, cfg, user_ids)            # (B, d)
+    scores = u @ cand_vectors.T                      # (B, N)
+    top, idx = jax.lax.top_k(scores, k)
+    return top, idx
+
+
+# BCE losses for the CTR models ------------------------------------------------
+
+def bce_loss(logits: Array, labels: Array) -> Array:
+    logits = logits.astype(jnp.float32)
+    return jnp.mean(jnp.maximum(logits, 0) - logits * labels
+                    + jnp.log1p(jnp.exp(-jnp.abs(logits))))

@@ -1,0 +1,331 @@
+"""Decoder-only transformer (dense + MoE) — the 5 assigned LM archs.
+
+Layer weights are stacked (L, ...) and consumed via lax.scan + remat;
+HLO size is O(1) in depth (96-layer nemotron compiles like 16-layer
+llama).  Three entry points per arch:
+
+  train_step(params, opt_state, batch)  -> loss, new state
+  prefill(params, tokens)               -> logits, kv_cache
+  decode_step(params, cache, token, pos)-> logits, new cache
+
+Sharding is annotated with logical PartitionSpecs from
+repro.sharding.specs; GQA KV projections shard head_dim (kv_heads <
+model axis — DESIGN.md §4), MoE experts shard per MoEConfig.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import moe as moe_lib
+from repro.sharding.specs import BATCH, constrain
+
+Array = jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    d_head: Optional[int] = None          # default d_model // n_heads
+    act: str = "silu"
+    gated_mlp: bool = True
+    moe: Optional[moe_lib.MoEConfig] = None
+    rope_theta: float = 10000.0
+    dtype: Any = jnp.bfloat16
+    remat: bool = True
+    attn_block: int = 1024
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_head or self.d_model // self.n_heads
+
+    @property
+    def padded_vocab(self) -> int:
+        """Embedding/unembedding rows padded so the vocab dim shards over
+        any <=512-chip mesh; padded logit columns are masked to -inf."""
+        return ((self.vocab + 511) // 512) * 512
+
+    @property
+    def n_params(self) -> int:
+        """Total parameter count (for 6ND MODEL_FLOPS)."""
+        dh = self.head_dim
+        attn = self.d_model * dh * (self.n_heads * 2 + self.n_kv_heads * 2)
+        if self.moe is not None:
+            m = self.moe
+            ff = m.n_experts * m.d_model * m.d_ff * (3 if m.gated else 2) \
+                + self.d_model * m.n_experts
+        else:
+            ff = self.d_model * self.d_ff * (3 if self.gated_mlp else 2)
+        per_layer = attn + ff + 2 * self.d_model
+        return self.n_layers * per_layer + 2 * self.vocab * self.d_model \
+            + self.d_model
+
+    @property
+    def n_active_params(self) -> int:
+        """Active params per token (MoE: top_k experts only)."""
+        if self.moe is None:
+            return self.n_params
+        m = self.moe
+        dh = self.head_dim
+        attn = self.d_model * dh * (self.n_heads * 2 + self.n_kv_heads * 2)
+        ff = m.top_k * m.d_model * m.d_ff * (3 if m.gated else 2) \
+            + self.d_model * m.n_experts
+        per_layer = attn + ff + 2 * self.d_model
+        return self.n_layers * per_layer + 2 * self.vocab * self.d_model \
+            + self.d_model
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+def init_params(key, cfg: TransformerConfig) -> dict:
+    nl, d, dh = cfg.n_layers, cfg.d_model, cfg.head_dim
+    hq, hkv = cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 8)
+    s = d ** -0.5
+    vp = cfg.padded_vocab
+    p = {
+        "embed": L.truncated_normal(ks[0], (vp, d), 1.0, jnp.float32),
+        "unembed": L.truncated_normal(ks[1], (d, vp), s, jnp.float32),
+        "final_norm": jnp.ones((d,), jnp.float32),
+        "attn": {
+            "w_q": L.truncated_normal(ks[2], (nl, d, hq * dh), s, cfg.dtype),
+            "w_k": L.truncated_normal(ks[3], (nl, d, hkv * dh), s, cfg.dtype),
+            "w_v": L.truncated_normal(ks[4], (nl, d, hkv * dh), s, cfg.dtype),
+            "w_o": L.truncated_normal(
+                ks[5], (nl, hq * dh, d), (hq * dh) ** -0.5, cfg.dtype),
+        },
+        "norm1": jnp.ones((nl, d), jnp.float32),
+        "norm2": jnp.ones((nl, d), jnp.float32),
+    }
+    if cfg.moe is not None:
+        p["moe"] = moe_lib.init_moe(ks[6], nl, cfg.moe, cfg.dtype)
+    else:
+        p["mlp"] = L.init_mlp(ks[6], nl, d, cfg.d_ff, gated=cfg.gated_mlp,
+                              dtype=cfg.dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# forward (training / prefill share the block; decode has its own)
+# ---------------------------------------------------------------------------
+
+def _layer_slice(p: dict, i) -> dict:
+    return jax.tree_util.tree_map(lambda a: a[i], p)
+
+
+def _block(cfg: TransformerConfig, lp: dict, x: Array, positions: Array
+           ) -> tuple[Array, Array]:
+    """One transformer layer on (B, S, D). Returns (out, aux_loss)."""
+    b, s, d = x.shape
+    dh, hq, hkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    x = constrain(x, BATCH, None, None)
+    h = L.rms_norm(x, lp["norm1"])
+    q = (h @ lp["attn"]["w_q"].astype(h.dtype)).reshape(b, s, hq, dh)
+    k = (h @ lp["attn"]["w_k"].astype(h.dtype)).reshape(b, s, hkv, dh)
+    v = (h @ lp["attn"]["w_v"].astype(h.dtype)).reshape(b, s, hkv, dh)
+    q = constrain(q, BATCH, None, "model", None)
+    k = constrain(k, BATCH, None, None, None)
+    v = constrain(v, BATCH, None, None, None)
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    attn = L.flash_attention(q, k, v, causal=True,
+                             block=min(cfg.attn_block, s))
+    attn = constrain(attn, BATCH, None, "model", None)
+    x = x + attn.reshape(b, s, hq * dh) @ lp["attn"]["w_o"].astype(x.dtype)
+
+    h2 = L.rms_norm(x, lp["norm2"])
+    if cfg.moe is not None:
+        y, aux = moe_lib.moe_apply(lp["moe"], h2.reshape(b * s, d), cfg.moe)
+        y = y.reshape(b, s, d)
+    else:
+        y = L.mlp_apply(lp["mlp"], h2, cfg.act)
+        aux = jnp.zeros((), jnp.float32)
+    return x + y, aux
+
+
+def _mask_pad_logits(cfg: TransformerConfig, logits: Array) -> Array:
+    """-inf the padded vocab columns (sampling/loss correctness)."""
+    if cfg.padded_vocab == cfg.vocab:
+        return logits
+    valid = jnp.arange(cfg.padded_vocab) < cfg.vocab
+    return jnp.where(valid, logits, -jnp.inf)
+
+
+def forward(params: dict, cfg: TransformerConfig, tokens: Array) -> tuple[Array, Array]:
+    """tokens (B, S) -> (logits (B, S, V), aux_loss)."""
+    b, s = tokens.shape
+    x = params["embed"][tokens].astype(cfg.dtype)
+    x = constrain(x, BATCH, None, None)
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    layer_params = {
+        "attn": params["attn"], "norm1": params["norm1"],
+        "norm2": params["norm2"],
+    }
+    if cfg.moe is not None:
+        layer_params["moe"] = params["moe"]
+    else:
+        layer_params["mlp"] = params["mlp"]
+
+    def scan_body(carry, lp):
+        x, aux = carry
+        x, a = _block(cfg, lp, x, positions)
+        return (x, aux + a), None
+
+    body = jax.checkpoint(scan_body) if cfg.remat else scan_body
+    (x, aux), _ = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)), layer_params)
+    x = L.rms_norm(x, params["final_norm"])
+    logits = _mask_pad_logits(cfg, x.astype(jnp.float32)
+                              @ params["unembed"])
+    return logits, aux / cfg.n_layers
+
+
+def loss_fn(params: dict, cfg: TransformerConfig, tokens: Array,
+            targets: Array, aux_weight: float = 0.01) -> Array:
+    logits, aux = forward(params, cfg, tokens)
+    # Sharding-friendly cross entropy: take_along_axis over a
+    # vocab-sharded logits tensor makes GSPMD all-gather the FULL logits
+    # (537 GB for llama train_4k).  one-hot multiply + reduce keeps every
+    # op sharded on vocab; only (B, S) partials cross the mesh.
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    shifted = logits - jax.lax.stop_gradient(m)
+    # padded columns are -inf => exp 0; one_hot never selects them
+    lse = jnp.log(jnp.sum(jnp.where(jnp.isfinite(shifted),
+                                    jnp.exp(shifted), 0.0), axis=-1))
+    onehot = jax.nn.one_hot(targets, cfg.padded_vocab, dtype=jnp.float32)
+    picked = jnp.sum(jnp.where(jnp.isfinite(shifted), shifted, 0.0)
+                     * onehot, axis=-1)
+    nll = lse - picked
+    return jnp.mean(nll) + aux_weight * aux
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: TransformerConfig, batch: int, max_seq: int,
+               dtype=None) -> dict:
+    dtype = dtype or cfg.dtype
+    shape = (cfg.n_layers, batch, max_seq, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
+            "len": jnp.zeros((), jnp.int32)}
+
+
+def prefill(params: dict, cfg: TransformerConfig, tokens: Array
+            ) -> tuple[Array, dict]:
+    """Full-sequence forward that also materialises the KV cache.
+
+    Returns (last-position logits (B, V), cache).
+    """
+    b, s = tokens.shape
+    x = params["embed"][tokens].astype(cfg.dtype)
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    layer_params = {
+        "attn": params["attn"], "norm1": params["norm1"],
+        "norm2": params["norm2"],
+    }
+    if cfg.moe is not None:
+        layer_params["moe"] = params["moe"]
+    else:
+        layer_params["mlp"] = params["mlp"]
+
+    dh, hq, hkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+
+    def scan_body(x, lp):
+        bb, ss, d = x.shape
+        h = L.rms_norm(x, lp["norm1"])
+        q = (h @ lp["attn"]["w_q"].astype(h.dtype)).reshape(bb, ss, hq, dh)
+        k = (h @ lp["attn"]["w_k"].astype(h.dtype)).reshape(bb, ss, hkv, dh)
+        v = (h @ lp["attn"]["w_v"].astype(h.dtype)).reshape(bb, ss, hkv, dh)
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k_r = L.apply_rope(k, positions, cfg.rope_theta)
+        attn = L.flash_attention(q, k_r, v, causal=True,
+                                 block=min(cfg.attn_block, ss))
+        x = x + attn.reshape(bb, ss, hq * dh) @ lp["attn"]["w_o"] \
+            .astype(x.dtype)
+        h2 = L.rms_norm(x, lp["norm2"])
+        if cfg.moe is not None:
+            y, _ = moe_lib.moe_apply(lp["moe"], h2.reshape(bb * ss, d),
+                                     cfg.moe)
+            y = y.reshape(bb, ss, d)
+        else:
+            y = L.mlp_apply(lp["mlp"], h2, cfg.act)
+        return x + y, (k_r, v)
+
+    body = jax.checkpoint(scan_body) if cfg.remat else scan_body
+    x, (ks, vs) = jax.lax.scan(body, x, layer_params)
+    x = L.rms_norm(x, params["final_norm"])
+    logits = _mask_pad_logits(cfg, x[:, -1].astype(jnp.float32)
+                              @ params["unembed"])
+    cache = {"k": ks, "v": vs, "len": jnp.asarray(s, jnp.int32)}
+    return logits, cache
+
+
+def decode_step(params: dict, cfg: TransformerConfig, cache: dict,
+                token: Array) -> tuple[Array, dict]:
+    """One-token decode.  token: (B,) int32; cache k/v:
+    (L, B, S, Hkv, dh) with valid prefix cache['len'].
+
+    Appends this step's K/V at position cache['len'] and attends over the
+    (now len+1)-long prefix.  O(S) per token — the `long_500k` path.
+    """
+    b = token.shape[0]
+    pos = cache["len"]
+    x = params["embed"][token][:, None].astype(cfg.dtype)    # (B, 1, D)
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    dh, hq, hkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+
+    layer_params = {
+        "attn": params["attn"], "norm1": params["norm1"],
+        "norm2": params["norm2"],
+    }
+    if cfg.moe is not None:
+        layer_params["moe"] = params["moe"]
+    else:
+        layer_params["mlp"] = params["mlp"]
+    kv = (cache["k"], cache["v"])
+
+    def scan_body(x, xs):
+        lp, k_cache, v_cache = xs
+        bb, ss, d = x.shape
+        h = L.rms_norm(x, lp["norm1"])
+        q = (h @ lp["attn"]["w_q"].astype(h.dtype)).reshape(bb, 1, hq, dh)
+        k = (h @ lp["attn"]["w_k"].astype(h.dtype)).reshape(bb, 1, hkv, dh)
+        v = (h @ lp["attn"]["w_v"].astype(h.dtype)).reshape(bb, 1, hkv, dh)
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+        k_cache = jax.lax.dynamic_update_slice(
+            k_cache, k.astype(k_cache.dtype), (0, pos, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(
+            v_cache, v.astype(v_cache.dtype), (0, pos, 0, 0))
+        attn = L.decode_attention(q, k_cache, v_cache, pos + 1)
+        x = x + attn.reshape(bb, 1, hq * dh) @ lp["attn"]["w_o"] \
+            .astype(x.dtype)
+        h2 = L.rms_norm(x, lp["norm2"])
+        if cfg.moe is not None:
+            y, _ = moe_lib.moe_apply(lp["moe"], h2.reshape(bb, d), cfg.moe)
+            y = y.reshape(bb, 1, d)
+        else:
+            y = L.mlp_apply(lp["mlp"], h2, cfg.act)
+        return x + y, (k_cache, v_cache)
+
+    x, (new_k, new_v) = jax.lax.scan(scan_body, x, (layer_params,) + kv)
+    x = L.rms_norm(x, params["final_norm"])
+    logits = _mask_pad_logits(cfg, x[:, 0].astype(jnp.float32)
+                              @ params["unembed"])
+    return logits, {"k": new_k, "v": new_v, "len": pos + 1}

@@ -1,0 +1,4 @@
+from repro.optim.adamw import (  # noqa: F401
+    AdamWConfig, adamw_init, adamw_update, cosine_schedule,
+    clip_by_global_norm)
+from repro.optim import compression  # noqa: F401

@@ -1,0 +1,36 @@
+"""Gradient compression for the cross-pod all-reduce (DESIGN.md §5).
+
+bf16 cast before the (slow, cross-pod) gradient reduction with an
+error-feedback residual kept in f32 alongside the optimizer state —
+halves cross-pod collective bytes at negligible quality cost; the
+residual makes the compression unbiased over time (EF-SGD style).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ef_init(params):
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress(grads, residual):
+    """(compressed bf16 grads, new residual).  Call BEFORE the cross-pod
+    psum; the residual carries the rounding error to the next step."""
+    def one(g, r):
+        gf = g.astype(jnp.float32) + r
+        gc = gf.astype(jnp.bfloat16)
+        return gc, gf - gc.astype(jnp.float32)
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_r = jax.tree_util.tree_leaves(residual)
+    out = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    return treedef.unflatten([o[0] for o in out]), \
+        treedef.unflatten([o[1] for o in out])
+
+
+def decompress(grads):
+    return jax.tree_util.tree_map(
+        lambda g: g.astype(jnp.float32), grads)

@@ -1,0 +1,190 @@
+"""Logical sharding rules -> PartitionSpecs per model family.
+
+Axis conventions (DESIGN.md §5):
+  "data"  : FSDP/ZeRO param+opt sharding, batch data-parallel axis
+  "model" : tensor parallel (heads / ffn hidden / experts / vocab)
+  "pod"   : pure data parallel across pods (multi-pod mesh only);
+            batch shards over ("pod", "data"), params replicate over pod
+            so the gradient all-reduce is the only cross-pod collective.
+
+All functions return pytrees of jax.sharding.PartitionSpec matching the
+corresponding param/batch pytrees.  ``batch_axes(mesh)`` resolves to
+("pod", "data") when the mesh has a pod axis, else "data".
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Any, Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+Array = Any
+
+
+def batch_axes(mesh) -> tuple[str, ...] | str:
+    return ("pod", "data") if "pod" in mesh.axis_names else "data"
+
+
+# ---------------------------------------------------------------------------
+# mesh context: lets model code state logical constraints without holding
+# a mesh reference.  Outside any context, constrain() is the identity, so
+# single-device tests/smokes are untouched.
+# ---------------------------------------------------------------------------
+
+_CTX: contextvars.ContextVar[Optional[dict]] = contextvars.ContextVar(
+    "repro_mesh_ctx", default=None)
+
+BATCH = "__batch__"      # placeholder resolved to ("pod","data") / "data"
+
+
+@contextlib.contextmanager
+def mesh_context(mesh, **extra):
+    tok = _CTX.set({"mesh": mesh, "batch": batch_axes(mesh), **extra})
+    try:
+        yield
+    finally:
+        _CTX.reset(tok)
+
+
+def ctx_flag(name: str, default=None):
+    ctx = _CTX.get()
+    return default if ctx is None else ctx.get(name, default)
+
+
+def constrain(x, *spec_parts):
+    """with_sharding_constraint with BATCH placeholder resolution; no-op
+    outside a mesh_context."""
+    ctx = _CTX.get()
+    if ctx is None:
+        return x
+    parts = tuple(ctx["batch"] if p == BATCH else p for p in spec_parts)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx["mesh"], P(*parts)))
+
+
+def _map_with_path(tree, fn):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: fn(jax.tree_util.keystr(path), leaf), tree)
+
+
+# ---------------------------------------------------------------------------
+# transformer
+# ---------------------------------------------------------------------------
+
+def transformer_param_specs(params, cfg, mesh, *, ep: bool | None = None):
+    """FSDP over "data" + TP over "model".
+
+    GQA: kv projections shard head_dim-packed output columns only when
+    n_kv_heads divides the model axis; here n_kv (4/8) < model(16), so
+    w_k/w_v shard the INPUT (d_model) dim on "model" instead — the
+    output stays replicated model-wise (cheap: kv proj is small) and the
+    QK^T contraction stays local.  MoE experts shard "model" when
+    divisible (EP), else the per-expert ffn dim (TP).
+    """
+    msize = mesh.shape["model"]
+    if cfg.moe is not None and ep is None:
+        ep = cfg.moe.n_experts % msize == 0
+
+    def rule(path: str, leaf):
+        if "embed" in path:
+            return P("model", None)            # vocab rows over model
+        if "unembed" in path:
+            return P(None, "model")            # logits cols over model
+        if "final_norm" in path or "norm" in path:
+            return P()
+        if "attn" in path:
+            if "w_q" in path:
+                return P(None, "data", "model")
+            if "w_o" in path:
+                return P(None, "model", "data")
+            # w_k / w_v: (L, D, Hkv*dh) — kv_heads (8/4) < model axis
+            # (16), so replicate model-wise (small) and FSDP over data;
+            # sharding D on "model" instead turns every K/V projection
+            # into an activation-sized partial-sum all-reduce.
+            return P(None, "data", None)
+        if "moe" in path:
+            if "router" in path:
+                return P(None, "data", None)
+            if ep:
+                # (L, E, D, F) / (L, E, F, D): experts over model
+                return P(None, "model", "data", None)
+            return (P(None, None, "data", "model")
+                    if ("w_up" in path or "w_gate" in path)
+                    else P(None, None, "model", "data"))
+        if "mlp" in path:
+            if "w_down" in path:
+                return P(None, "model", "data")
+            return P(None, "data", "model")    # w_up / w_gate
+        return P()
+
+    return _map_with_path(params, rule)
+
+
+def transformer_batch_specs(mesh):
+    b = batch_axes(mesh)
+    return {"tokens": P(b, None), "targets": P(b, None)}
+
+
+def transformer_cache_specs(mesh, *, long_context: bool):
+    """decode_32k: batch-sharded cache; long_500k: sequence-sharded cache
+    (flash-decoding over chips — DESIGN.md §4)."""
+    b = batch_axes(mesh)
+    if long_context:
+        kv = P(None, None, b, None, None)       # (L, B, S, Hkv, dh)
+    else:
+        kv = P(None, b, None, None, None)
+    return {"k": kv, "v": kv, "len": P()}
+
+
+# ---------------------------------------------------------------------------
+# gnn
+# ---------------------------------------------------------------------------
+
+def pna_param_specs(params, mesh):
+    def rule(path: str, leaf):
+        if leaf.ndim == 2:
+            return P(None, "model") if leaf.shape[-1] % mesh.shape["model"] \
+                == 0 else P()
+        return P()
+    return _map_with_path(params, rule)
+
+
+def pna_batch_specs(mesh):
+    b = batch_axes(mesh)
+    return {"x": P(), "src": P(b), "dst": P(b),
+            "labels": P(), "edge_mask": P(b), "label_mask": P()}
+
+
+# ---------------------------------------------------------------------------
+# recsys
+# ---------------------------------------------------------------------------
+
+def recsys_param_specs(params, mesh):
+    """Embedding tables: rows sharded over ("model",) (the classic DLRM
+    model-parallel layout — tables are the memory, MLPs are small and
+    FSDP-shard over data where divisible)."""
+    def rule(path: str, leaf):
+        if "table" in path:
+            return P("model", None)
+        if leaf.ndim == 2 and leaf.shape[0] % mesh.shape["model"] == 0 \
+                and leaf.shape[0] >= 256:
+            return P("model", None)
+        return P()
+    return _map_with_path(params, rule)
+
+
+def recsys_batch_specs(mesh):
+    b = batch_axes(mesh)
+    return {"dense": P(b, None), "sparse_ids": P(b, None),
+            "labels": P(b), "hist_ids": P(b, None), "target_id": P(b),
+            "user_ids": P(b, None), "item_ids": P(b, None)}
+
+
+def named_sharding_tree(mesh, spec_tree):
+    from jax.sharding import NamedSharding
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))

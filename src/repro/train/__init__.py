@@ -1,0 +1,2 @@
+from repro.train.loop import TrainLoopConfig, train_loop  # noqa: F401
+from repro.train import fault_tolerance  # noqa: F401

@@ -1,0 +1,46 @@
+"""Per-arch smoke tests: reduced config, one forward/train step on CPU,
+output shapes + no NaNs (assignment requirement)."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_IDS, get
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke(arch):
+    mod = get(arch)
+    out = mod.smoke()
+    assert out
+    for leaf in jax.tree_util.tree_leaves(out):
+        if jnp.issubdtype(leaf.dtype, jnp.floating):
+            assert bool(jnp.all(jnp.isfinite(leaf))), arch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_shapes_declared(arch):
+    mod = get(arch)
+    shapes = mod.shapes()
+    assert len(shapes) >= 3
+    for name, spec in shapes.items():
+        assert isinstance(spec, dict) and spec, (arch, name)
+
+
+def test_40_assigned_cells_present():
+    """10 assigned archs x 4 shapes (+ paper arch's own cells)."""
+    n = 0
+    for arch in ARCH_IDS:
+        if arch == "metric-search":
+            continue
+        n += len(get(arch).shapes())
+    assert n == 40
+
+
+def test_lm_smoke_loss_reasonable():
+    mod = get("llama3.2-1b")
+    out = mod.smoke()
+    # untrained CE should be near ln(vocab)
+    import math
+    v = mod.reduced_config().vocab
+    assert abs(float(out["loss"]) - math.log(v)) < 2.0

@@ -1,0 +1,68 @@
+"""Distributed: forest search on a multi-device (host-platform) mesh and
+the dry-run machinery on a tiny mesh — run in a subprocess so the forced
+device count never leaks into other tests."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run_sub(code: str, devices: int = 8) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + f" --xla_force_host_platform_device_count={devices}")
+    env["PYTHONPATH"] = os.path.join(_REPO, "src")
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+def test_forest_search_multidevice():
+    out = _run_sub("""
+import numpy as np, jax, json
+from repro.core.distributed import build_forest, forest_search
+from repro.core import bruteforce
+rng = np.random.default_rng(0)
+data = rng.random((4000, 8)).astype(np.float32)
+queries = rng.random((16, 8)).astype(np.float32)
+mesh = jax.make_mesh((8,), ("data",))
+forest = build_forest(data, "euclidean", mesh, kind="mht", leaf_size=16)
+gids, cnt, nd = forest_search(forest, queries, 0.35,
+                              metric_name="euclidean", mechanism="hilbert")
+_, sets_bf = bruteforce.range_search(data, queries, 0.35,
+                                     metric_name="euclidean")
+sets = [set(x for x in row.tolist() if x >= 0) for row in np.asarray(gids)]
+_, _, nd_hyp = forest_search(forest, queries, 0.35,
+                             metric_name="euclidean", mechanism="hyperbolic")
+print(json.dumps({
+    "identical": sets == sets_bf,
+    "hilbert_nd": float(np.mean(np.asarray(nd))),
+    "hyperbolic_nd": float(np.mean(np.asarray(nd_hyp))),
+}))
+""")
+    res = json.loads(out.strip().splitlines()[-1])
+    assert res["identical"] is True
+    assert res["hilbert_nd"] < res["hyperbolic_nd"]
+
+
+@pytest.mark.slow
+def test_dryrun_cell_small_mesh():
+    """Lower+compile one LM train cell on a 2x2 debug mesh (same code
+    path as the 512-chip dry-run, CI-sized)."""
+    out = _run_sub("""
+import numpy as np, jax, json
+import repro.launch.dryrun as dr
+from repro.launch.mesh import make_debug_mesh
+mesh = make_debug_mesh(2, 2)
+res = dr.run_cell("llama3.2-1b", "train_4k", mesh)
+print(json.dumps({"dom": res["roofline"]["dominant"],
+                  "flops": res["flops_per_device"] > 0}))
+""", devices=4)
+    res = json.loads(out.strip().splitlines()[-1])
+    assert res["flops"] is True

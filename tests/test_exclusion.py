@@ -1,0 +1,101 @@
+"""Exclusion predicates: soundness, relative weakness (paper Appendix A),
+and geometric identity of the Hilbert margin."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import exclusion as E
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.integers(0, 10**6))
+def test_hilbert_weaker_than_hyperbolic(seed):
+    """Appendix A: hilbert margin >= hyperbolic margin whenever the three
+    points satisfy triangle inequality => any hyperbolic exclusion is
+    also a hilbert exclusion (never the reverse)."""
+    rng = np.random.default_rng(seed)
+    q, p1, p2 = rng.normal(size=(3, 6))
+    d1 = np.linalg.norm(q - p1)
+    d2 = np.linalg.norm(q - p2)
+    d12 = np.linalg.norm(p1 - p2)
+    m_hyp = float(E.hyperbolic_margin(d1, d2, d12))
+    m_hil = float(E.hilbert_margin(d1, d2, d12))
+    if d1 >= d2:
+        assert m_hil >= m_hyp - 1e-9
+    else:
+        assert m_hil <= m_hyp + 1e-9
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.integers(0, 10**6))
+def test_hilbert_margin_is_hyperplane_distance(seed):
+    """Theorem 1: (d1^2-d2^2)/(2 d12) == signed distance from q to the
+    bisector hyperplane, exactly, in Euclidean space."""
+    rng = np.random.default_rng(seed)
+    q, p1, p2 = rng.normal(size=(3, 5))
+    if np.linalg.norm(p1 - p2) < 1e-3:
+        return
+    d1 = np.linalg.norm(q - p1)
+    d2 = np.linalg.norm(q - p2)
+    d12 = np.linalg.norm(p1 - p2)
+    m_hil = float(E.hilbert_margin(d1, d2, d12))
+    mid = (p1 + p2) / 2
+    normal = (p2 - p1) / d12
+    signed = float((q - mid) @ normal)    # + => q on the p2 side
+    assert abs(m_hil - signed) < 1e-6 * max(1.0, abs(signed))
+
+
+@settings(max_examples=300, deadline=None)
+@given(st.integers(0, 10**6), st.floats(0.01, 1.0))
+def test_exclusion_soundness_euclidean(seed, t):
+    """If the hilbert condition fires for (q, p1, p2, t) then NO point
+    within t of q is closer to p1 (Theorems 1+2), verified by sampling
+    the ball."""
+    rng = np.random.default_rng(seed)
+    q, p1, p2 = rng.normal(size=(3, 4))
+    d1 = np.linalg.norm(q - p1)
+    d2 = np.linalg.norm(q - p2)
+    d12 = np.linalg.norm(p1 - p2)
+    if not bool(E.exclude_p1_side_hilbert(d1, d2, d12, t)):
+        return
+    # sample points in the ball B(q, t)
+    u = rng.normal(size=(64, 4))
+    u = u / np.linalg.norm(u, axis=-1, keepdims=True)
+    r = t * rng.random((64, 1)) ** 0.25
+    s = q + u * r
+    ds1 = np.linalg.norm(s - p1, axis=-1)
+    ds2 = np.linalg.norm(s - p2, axis=-1)
+    assert (ds1 > ds2 - 1e-9).all()
+
+
+def test_degenerate_pivots_never_exclude():
+    m = E.hilbert_margin(jnp.asarray(1.0), jnp.asarray(0.2),
+                         jnp.asarray(0.0))
+    assert float(m) == 0.0
+    left, right = E.partition_exclusions(
+        jnp.asarray(1.0), jnp.asarray(0.2), jnp.asarray(0.0),
+        jnp.asarray(0.1), use_hilbert=True)
+    assert not bool(left) and not bool(right)
+
+
+def test_at_most_one_side_excluded():
+    rng = np.random.default_rng(0)
+    d1 = rng.random(100) * 2
+    d2 = rng.random(100) * 2
+    d12 = rng.random(100) + 0.5
+    for mech in (True, False):
+        l, r = E.partition_exclusions(
+            jnp.asarray(d1), jnp.asarray(d2), jnp.asarray(d12),
+            jnp.asarray(0.1), use_hilbert=mech)
+        assert not bool(jnp.any(l & r))
+
+
+def test_ball_exclusions():
+    assert bool(E.exclude_outside_ball(jnp.asarray(2.0), jnp.asarray(1.0),
+                                       jnp.asarray(0.5)))
+    assert not bool(E.exclude_outside_ball(
+        jnp.asarray(1.4), jnp.asarray(1.0), jnp.asarray(0.5)))
+    assert bool(E.exclude_inside_ring(jnp.asarray(0.2), jnp.asarray(1.0),
+                                      jnp.asarray(0.5)))

@@ -1,0 +1,90 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweep + hypothesis
+property tests (interpret mode on CPU)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+SHAPES = [(1, 1, 3), (7, 13, 5), (64, 64, 32), (70, 130, 50),
+          (128, 128, 128), (129, 257, 130), (33, 200, 257)]
+
+
+def _data(seed, q, n, d, simplex=False, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    a = rng.random((q, d)).astype(dtype) + 1e-4
+    b = rng.random((n, d)).astype(dtype) + 1e-4
+    if simplex:
+        a = a / a.sum(-1, keepdims=True)
+        b = b / b.sum(-1, keepdims=True)
+    return a, b
+
+
+@pytest.mark.parametrize("q,n,d", SHAPES)
+@pytest.mark.parametrize("metric,simplex,tol", [
+    ("euclidean", False, 1e-4), ("sqeuclidean", False, 1e-4),
+    ("cosine", False, 1e-4), ("jsd", True, 1e-4),
+    ("triangular", True, 1e-4)])
+def test_pairwise_shapes(q, n, d, metric, simplex, tol):
+    a, b = _data(0, q, n, d, simplex)
+    out = ops.pairwise_distance(a, b, metric)
+    exp = {
+        "euclidean": ref.pairwise_l2_ref,
+        "sqeuclidean": lambda x, y: ref.pairwise_l2_ref(x, y, squared=True),
+        "cosine": ref.pairwise_cosine_ref,
+        "jsd": ref.pairwise_jsd_ref,
+        "triangular": ref.pairwise_triangular_ref,
+    }[metric](jnp.asarray(a), jnp.asarray(b))
+    assert out.shape == (q, n)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.float16])
+def test_pairwise_dtypes(dtype):
+    a, b = _data(1, 40, 60, 33, dtype=dtype)
+    out = ops.pairwise_distance(a, b, "euclidean")
+    exp = ref.pairwise_l2_ref(jnp.asarray(a, jnp.float32),
+                              jnp.asarray(b, jnp.float32))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               atol=5e-3, rtol=5e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 70), st.integers(1, 70), st.integers(1, 40),
+       st.integers(0, 10**6))
+def test_pairwise_l2_property(q, n, d, seed):
+    a, b = _data(seed, q, n, d)
+    out = np.asarray(ops.pairwise_distance(a, b, "euclidean"))
+    exp = np.asarray(ref.pairwise_l2_ref(jnp.asarray(a), jnp.asarray(b)))
+    np.testing.assert_allclose(out, exp, atol=2e-4, rtol=2e-4)
+
+
+def test_exclusion_margins_kernel():
+    rng = np.random.default_rng(0)
+    q = rng.random((70, 50)).astype(np.float32)
+    p1 = rng.random((37, 50)).astype(np.float32)
+    p2 = rng.random((37, 50)).astype(np.float32)
+    d12 = np.asarray(ref.pairwise_l2_ref(
+        jnp.asarray(p1), jnp.asarray(p2))).diagonal().copy()
+    hyp, hil = ops.exclusion_margins(q, p1, p2, d12)
+    rh, ri = ref.exclusion_margins_ref(
+        jnp.asarray(q), jnp.asarray(p1), jnp.asarray(p2),
+        jnp.asarray(d12))
+    np.testing.assert_allclose(np.asarray(hyp), np.asarray(rh), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(hil), np.asarray(ri), atol=1e-4)
+    # weakness: hilbert margin >= hyperbolic wherever d1 >= d2
+    mask = np.asarray(rh) >= 0
+    assert (np.asarray(hil)[mask] >= np.asarray(hyp)[mask] - 1e-5).all()
+
+
+def test_exclusion_kernel_degenerate_pairs():
+    """d12 == 0 pairs must yield hilbert margin 0 (no exclusion)."""
+    rng = np.random.default_rng(1)
+    q = rng.random((8, 16)).astype(np.float32)
+    p = rng.random((4, 16)).astype(np.float32)
+    hyp, hil = ops.exclusion_margins(q, p, p, np.zeros(4, np.float32))
+    assert np.allclose(np.asarray(hil), 0.0, atol=1e-6)
+    assert np.allclose(np.asarray(hyp), 0.0, atol=1e-6)

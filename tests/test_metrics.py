@@ -1,0 +1,104 @@
+"""Metric registry: metric axioms + four-point property screens."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import embeddings, metrics
+
+EMBEDDABLE = ["euclidean", "cosine", "jsd", "triangular", "sqrt_manhattan"]
+NON_EMBEDDABLE = ["manhattan", "chebyshev", "angular"]
+PROPER_METRICS = EMBEDDABLE + NON_EMBEDDABLE
+
+
+def _sample(seed, n, d, metric):
+    rng = np.random.default_rng(seed)
+    x = rng.random((n, d)).astype(np.float32) + 1e-3
+    return np.asarray(metrics.normalise_for(metrics.get(metric), x))
+
+
+@pytest.mark.parametrize("name", PROPER_METRICS)
+def test_metric_axioms(name):
+    m = metrics.get(name)
+    x = _sample(0, 24, 6, name)
+    d = np.asarray(m.pairwise(x, x))
+    assert np.allclose(np.diag(d), 0.0, atol=5e-3), "identity"
+    assert np.allclose(d, d.T, atol=1e-5), "symmetry"
+    assert (d >= -1e-6).all(), "positivity"
+    # triangle inequality over all triples
+    lhs = d[:, None, :]                      # d(a,c)
+    rhs = d[:, :, None] + d[None, :, :]      # d(a,b)+d(b,c)
+    assert (lhs <= rhs + 1e-4).all(), "triangle inequality"
+
+
+@pytest.mark.parametrize("name", EMBEDDABLE)
+def test_four_point_property_holds(name):
+    m = metrics.get(name)
+    x = _sample(1, 64, 8, name)
+    frac, worst = embeddings.screen_metric(
+        m, jnp.asarray(x), 300, jax.random.PRNGKey(0))
+    assert float(frac) == 1.0, f"worst defect {worst}"
+
+
+def test_four_point_property_fails_for_known_counterexamples():
+    # star graph / Hamming-cycle squared-distance matrices (paper §5.7)
+    star = np.array([[0, 2, 2, 1], [2, 0, 2, 1], [2, 2, 0, 1],
+                     [1, 1, 1, 0]], np.float64) ** 2
+    cyc = np.array([[0, 1, 2, 1], [1, 0, 1, 2], [2, 1, 0, 1],
+                    [1, 2, 1, 0]], np.float64) ** 2
+    assert not bool(embeddings.is_four_embeddable_quadruple(
+        jnp.asarray(star)))
+    assert not bool(embeddings.is_four_embeddable_quadruple(
+        jnp.asarray(cyc)))
+
+
+def test_chebyshev_screen_detects_failure():
+    m = metrics.get("chebyshev")
+    x = _sample(2, 128, 6, "chebyshev")
+    frac, worst = embeddings.screen_metric(
+        m, jnp.asarray(x), 500, jax.random.PRNGKey(1))
+    assert float(frac) < 1.0
+    assert float(worst) > 1e-5
+
+
+def test_cosine_is_normalised_euclidean():
+    # d_cos(v, w) = (1/sqrt(2)) ||v/|v| - w/|w|||  (paper §5.5)
+    rng = np.random.default_rng(3)
+    v = rng.random((10, 5)).astype(np.float32)
+    w = rng.random((12, 5)).astype(np.float32)
+    m = metrics.get("cosine")
+    d = np.asarray(m.pairwise(v, w))
+    vn = v / np.linalg.norm(v, axis=-1, keepdims=True)
+    wn = w / np.linalg.norm(w, axis=-1, keepdims=True)
+    eu = np.asarray(metrics.get("euclidean").pairwise(vn, wn))
+    assert np.allclose(d, eu / np.sqrt(2), atol=1e-5)
+
+
+def test_jsd_bounds_and_selfidentity():
+    x = _sample(4, 16, 10, "jsd")
+    m = metrics.get("jsd")
+    d = np.asarray(m.pairwise(x, x))
+    assert (d <= 1.0 + 1e-6).all()
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(2, 12), st.integers(0, 10000))
+def test_embed_quadruple_reconstructs_euclidean(dim, seed):
+    """Property: classical-MDS embedding of any Euclidean quadruple
+    reproduces its distance matrix (constructive 4-embeddability)."""
+    rng = np.random.default_rng(seed)
+    pts = rng.random((4, dim))
+    d2 = ((pts[:, None, :] - pts[None, :, :]) ** 2).sum(-1)
+    coords = np.asarray(embeddings.embed_quadruple_l2(jnp.asarray(d2)))
+    d2r = ((coords[:, None, :] - coords[None, :, :]) ** 2).sum(-1)
+    assert np.allclose(d2, d2r, atol=1e-4 * max(1.0, d2.max()))
+
+
+def test_hilbert_requires_four_point_flag():
+    from repro.core import exclusion
+    with pytest.raises(ValueError):
+        exclusion.margin_fn_for(metrics.get("manhattan"), "hilbert")
+    # but sqrt transform is fine
+    exclusion.margin_fn_for(metrics.get("sqrt_manhattan"), "hilbert")

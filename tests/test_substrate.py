@@ -1,0 +1,162 @@
+"""Substrate: optimizer, checkpoint/restart (fault tolerance), data
+pipeline, samplers."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.io import (latest_step, restore_checkpoint,
+                                 save_checkpoint)
+from repro.data import sampler, synthetic
+from repro.data.pipeline import Prefetcher
+from repro.optim.adamw import (AdamWConfig, adamw_init, adamw_update,
+                               clip_by_global_norm, cosine_schedule)
+from repro.optim import compression
+from repro.train.fault_tolerance import StragglerDetector
+from repro.train.loop import TrainLoopConfig, train_loop
+
+
+def _quadratic_problem():
+    target = jnp.asarray([1.0, -2.0, 3.0])
+    params = {"w": jnp.zeros(3)}
+
+    def loss_fn(p, batch):
+        return jnp.sum((p["w"] - target) ** 2) + 0.0 * batch["x"].sum()
+    return params, loss_fn
+
+
+def test_adamw_converges():
+    params, loss_fn = _quadratic_problem()
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=0,
+                      total_steps=500)
+    opt = adamw_init(params)
+    batch = {"x": jnp.zeros(1)}
+    for _ in range(300):
+        g = jax.grad(lambda p: loss_fn(p, batch))(params)
+        params, opt, _ = adamw_update(params, g, opt, cfg)
+    np.testing.assert_allclose(np.asarray(params["w"]), [1.0, -2.0, 3.0],
+                               atol=0.05)
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.asarray([3.0, 4.0])}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert abs(float(norm) - 5.0) < 1e-6
+    np.testing.assert_allclose(np.asarray(clipped["a"]), [0.6, 0.8],
+                               atol=1e-6)
+
+
+def test_cosine_schedule_monotone_after_warmup():
+    cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100)
+    vals = [float(cosine_schedule(cfg, jnp.asarray(s)))
+            for s in range(0, 100, 5)]
+    assert vals[0] < vals[2]                   # warmup rises
+    assert vals[-1] < vals[3]                  # decays to ~0
+
+
+def test_gradient_compression_error_feedback():
+    g = {"w": jnp.asarray([1.0 + 1e-4, -2.0])}
+    r = compression.ef_init(g)
+    total = jnp.zeros(2)
+    for _ in range(64):
+        c, r = compression.compress(g, r)
+        total = total + compression.decompress(c)["w"]
+    mean = np.asarray(total) / 64
+    np.testing.assert_allclose(mean, np.asarray(g["w"]), rtol=1e-4)
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": np.arange(6, dtype=np.float32).reshape(2, 3),
+            "b": {"c": np.asarray(7, np.int32)}}
+    save_checkpoint(str(tmp_path), 5, tree, extra={"note": "x"})
+    assert latest_step(str(tmp_path)) == 5
+    restored, step, extra = restore_checkpoint(str(tmp_path), tree)
+    assert step == 5 and extra == {"note": "x"}
+    np.testing.assert_array_equal(restored["a"], tree["a"])
+    np.testing.assert_array_equal(restored["b"]["c"], tree["b"]["c"])
+
+
+def test_train_loop_restart_bitwise(tmp_path):
+    """Kill training at step k; resume must land on the same final state
+    as an uninterrupted run (the fault-tolerance contract)."""
+    target = jnp.asarray([0.5, -1.5])
+
+    def loss_fn(p, batch):
+        return jnp.sum((p["w"] - target) ** 2) * batch["scale"]
+
+    def make_batch(step):
+        return {"scale": jnp.asarray(1.0 + 0.01 * (step % 3))}
+
+    def fresh_params():
+        return {"w": jnp.zeros(2)}
+
+    cfg_full = TrainLoopConfig(
+        total_steps=30, ckpt_every=10, ckpt_dir=str(tmp_path / "a"),
+        optimizer=AdamWConfig(lr=0.05, weight_decay=0.0, warmup_steps=0,
+                              total_steps=30))
+    p_full, _, _ = train_loop(loss_fn, fresh_params(), make_batch,
+                              cfg_full, resume=False)
+
+    # interrupted run: stop at 14 (ckpt at 10), then resume
+    cfg_a = TrainLoopConfig(
+        total_steps=15, ckpt_every=10, ckpt_dir=str(tmp_path / "b"),
+        optimizer=cfg_full.optimizer)
+    train_loop(loss_fn, fresh_params(), make_batch, cfg_a, resume=False)
+    cfg_b = TrainLoopConfig(
+        total_steps=30, ckpt_every=10, ckpt_dir=str(tmp_path / "b"),
+        optimizer=cfg_full.optimizer)
+    p_resumed, _, _ = train_loop(loss_fn, fresh_params(), make_batch,
+                                 cfg_b, resume=True)
+    np.testing.assert_allclose(np.asarray(p_full["w"]),
+                               np.asarray(p_resumed["w"]), atol=1e-7)
+
+
+def test_straggler_detector():
+    det = StragglerDetector(window=50, k=6.0)
+    for _ in range(30):
+        det.record(0.1 + 0.001 * np.random.default_rng(0).random())
+    assert det.record(1.5) is True
+    assert det.flagged == 1
+
+
+def test_prefetcher_yields_in_order():
+    fetched = []
+
+    def make_batch(step):
+        return {"step": step}
+
+    pf = Prefetcher(make_batch, start_step=3, depth=2)
+    it = iter(pf)
+    for _ in range(4):
+        s, b = next(it)
+        fetched.append(s)
+    pf.close()
+    assert fetched == [3, 4, 5, 6]
+
+
+def test_synthetic_determinism():
+    a = synthetic.token_batch(7, 3, 4, 16, 100)
+    b = synthetic.token_batch(7, 3, 4, 16, 100)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = synthetic.token_batch(7, 4, 4, 16, 100)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+
+
+def test_neighbor_sampler_block():
+    g = synthetic.random_graph(0, 500, 4000, 8, n_classes=5)
+    csr = sampler.CSRGraph.from_edges(g["src"], g["dst"], 500)
+    rng = np.random.default_rng(0)
+    seeds = rng.choice(500, 32, replace=False)
+    block = sampler.sample_block(csr, g["x"], g["labels"], seeds,
+                                 (5, 3), rng=rng)
+    assert block["x"].shape[0] == block["labels"].shape[0]
+    assert block["src"].shape == block["dst"].shape
+    ne = int(block["edge_mask"].sum())
+    assert ne > 0
+    # all masked edges reference in-range local nodes
+    assert block["src"][:ne].max() < block["x"].shape[0]
+    assert block["label_mask"].sum() == len(seeds)
+    # dst of sampled edges should be reachable: seed rows get messages
+    assert set(block["dst"][:ne]) & set(range(len(seeds)))

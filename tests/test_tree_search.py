@@ -1,0 +1,114 @@
+"""System behaviour: every (index x mechanism x metric) returns EXACTLY
+the brute-force result set (paper §6.5) and Hilbert never does more
+distance evaluations than Hyperbolic."""
+
+import numpy as np
+import pytest
+
+from repro.core import bruteforce
+from repro.core.tree import (build_disat, build_ght, build_mht,
+                             search_binary_tree, search_sat)
+
+CASES = [
+    ("euclidean", 0.32, False),
+    ("cosine", 0.18, False),
+    ("jsd", 0.09, True),
+    ("triangular", 0.12, True),
+]
+
+
+def _data(metric_simplex, n=1500, d=8, nq=25, seed=0):
+    rng = np.random.default_rng(seed)
+    raw = rng.random((n + nq, d)).astype(np.float32)
+    if metric_simplex:
+        raw = raw / raw.sum(-1, keepdims=True)
+    return raw[:n], raw[n:]
+
+
+@pytest.mark.parametrize("metric,t,simplex", CASES)
+@pytest.mark.parametrize("kind", ["ght", "mht"])
+def test_binary_tree_exact(metric, t, simplex, kind):
+    data, queries = _data(simplex)
+    _, sets_bf = bruteforce.range_search(data, queries, t,
+                                         metric_name=metric)
+    build = {"ght": build_ght, "mht": build_mht}[kind]
+    tree = build(data, metric, leaf_size=16, seed=1)
+    nd = {}
+    for mech in ("hyperbolic", "hilbert"):
+        st = search_binary_tree(tree, queries, t, metric_name=metric,
+                                mechanism=mech)
+        assert not np.asarray(st.overflow).any()
+        assert not np.asarray(st.stack_overflow).any()
+        assert st.result_sets() == sets_bf
+        nd[mech] = np.asarray(st.n_dist)
+    # per-query: hilbert never MORE distance evals (strictly weaker cond)
+    assert (nd["hilbert"] <= nd["hyperbolic"]).all()
+    assert nd["hilbert"].sum() < nd["hyperbolic"].sum()
+
+
+@pytest.mark.parametrize("metric,t,simplex", CASES)
+def test_disat_exact(metric, t, simplex):
+    data, queries = _data(simplex, n=1200)
+    _, sets_bf = bruteforce.range_search(data, queries, t,
+                                         metric_name=metric)
+    tree = build_disat(data, metric, seed=2)
+    nd = {}
+    for mech in ("hyperbolic", "hilbert"):
+        st = search_sat(tree, queries, t, metric_name=metric,
+                        mechanism=mech)
+        assert not np.asarray(st.overflow).any()
+        assert not np.asarray(st.stack_overflow).any()
+        assert st.result_sets() == sets_bf
+        nd[mech] = np.asarray(st.n_dist)
+    assert nd["hilbert"].sum() < nd["hyperbolic"].sum()
+
+
+def test_degenerate_data_ball_fallback():
+    """Duplicates + collinear points: the ball-fallback nodes must keep
+    every mechanism exact (regression: the forced-split bug)."""
+    rng = np.random.default_rng(0)
+    data = np.concatenate([
+        np.zeros((40, 4)), np.ones((40, 4)),
+        np.linspace(0, 1, 80)[:, None] * np.ones((1, 4)),
+    ]).astype(np.float32)
+    queries = rng.random((8, 4)).astype(np.float32)
+    _, sets_bf = bruteforce.range_search(data, queries, 0.6,
+                                         metric_name="euclidean")
+    for build, search in [(build_ght, search_binary_tree),
+                          (build_mht, search_binary_tree)]:
+        tree = build(data, "euclidean", leaf_size=8, seed=3)
+        for mech in ("hyperbolic", "hilbert"):
+            st = search(tree, queries, 0.6, metric_name="euclidean",
+                        mechanism=mech, r_cap=256)
+            assert st.result_sets() == sets_bf
+    sat = build_disat(data, "euclidean", seed=3)
+    for mech in ("hyperbolic", "hilbert"):
+        st = search_sat(sat, queries, 0.6, metric_name="euclidean",
+                        mechanism=mech, r_cap=256)
+        assert st.result_sets() == sets_bf
+
+
+def test_mht_reuses_parent_distance():
+    """MHT distance counts must be strictly below GHT's on the same data
+    (pivot reuse, paper §6.3)."""
+    data, queries = _data(False, n=2000)
+    ght = build_ght(data, "euclidean", leaf_size=16, seed=1)
+    mht = build_mht(data, "euclidean", leaf_size=16, seed=1)
+    nd_g = np.asarray(search_binary_tree(
+        ght, queries, 0.3, metric_name="euclidean",
+        mechanism="hilbert").n_dist).mean()
+    nd_m = np.asarray(search_binary_tree(
+        mht, queries, 0.3, metric_name="euclidean",
+        mechanism="hilbert").n_dist).mean()
+    assert nd_m < nd_g
+
+
+def test_unsound_mechanism_rejected():
+    data, queries = _data(False, n=300)
+    tree = build_ght(data, "manhattan", leaf_size=16, seed=1)
+    with pytest.raises(ValueError):
+        search_binary_tree(tree, queries, 0.3, metric_name="manhattan",
+                           mechanism="hilbert")
+    # hyperbolic is fine for any metric
+    search_binary_tree(tree, queries, 0.3, metric_name="manhattan",
+                       mechanism="hyperbolic")

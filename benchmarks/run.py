@@ -1,10 +1,14 @@
-"""Benchmark driver: one function per paper table/figure.
+"""Benchmark driver: one function per paper table/figure, plus the
+system-performance benches (frontier traversal).
 
   PYTHONPATH=src python -m benchmarks.run            # all tables
   PYTHONPATH=src python -m benchmarks.run table3     # one table
+  PYTHONPATH=src python -m benchmarks.run traversal  # frontier sweep
 
 Output: per-table CSV blocks (name, values, derived ratios), then a
 summary `name,us_per_call,derived` line per table for harness parsing.
+The ``traversal`` bench additionally writes the machine-readable
+``BENCH_traversal.json`` (perf trajectory artifact).
 """
 
 from __future__ import annotations
@@ -13,13 +17,14 @@ import sys
 import time
 
 from benchmarks import (disat_realworld, exclusion_power, ght_mht_cost,
-                        idim_thresholds)
+                        idim_thresholds, traversal_throughput)
 
 TABLES = {
     "table2": idim_thresholds.main,
     "table3": exclusion_power.main,
     "table4": ght_mht_cost.main,
     "fig13": disat_realworld.main,
+    "traversal": traversal_throughput.main,
 }
 
 

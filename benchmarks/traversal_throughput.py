@@ -1,0 +1,131 @@
+"""Frontier-batched traversal throughput (DESIGN.md §3).
+
+For both engines (GHT binary / DiSAT) x all four paper metrics, sweep
+the frontier width B over {1, 4, 8, 16} and report:
+
+  * while_loop iterations (the serialised-step count B attacks)
+  * total n_dist (MUST be invariant in B — asserted, with identical
+    result sets: frontier batching changes schedule, never work)
+  * wall-clock per search call (jitted, post-compile)
+
+Machine-readable output: ``main(json_path=...)`` (and the run.py driver)
+writes BENCH_traversal.json for the perf trajectory.
+
+  PYTHONPATH=src python -m benchmarks.traversal_throughput
+"""
+
+from __future__ import annotations
+
+import json
+import platform
+import time
+
+import jax
+import numpy as np
+
+from repro.core.tree import (build_disat, build_ght, search_binary_tree,
+                             search_sat)
+from benchmarks.common import make_space
+
+WIDTHS = (1, 4, 8, 16)
+
+# (metric, threshold) — thresholds sized for ~1% selectivity on the
+# §6.1 synthetic spaces, matching the system tests
+CASES = [("euclidean", 0.32), ("cosine", 0.18),
+         ("jsd", 0.09), ("triangular", 0.12)]
+
+
+def _run_once(search, tree, queries, t, metric, b):
+    st = search(tree, queries, t, metric_name=metric,
+                mechanism="hilbert", frontier=b)
+    jax.block_until_ready(st.res_cnt)
+    return st
+
+
+def _sweep(engine, search, tree, queries, t, metric, *, widths, repeat):
+    rows = []
+    base = None
+    for b in widths:
+        st = _run_once(search, tree, queries, t, metric, b)  # compile+run
+        t0 = time.perf_counter()
+        for _ in range(repeat):
+            st = _run_once(search, tree, queries, t, metric, b)
+        wall_us = (time.perf_counter() - t0) / repeat * 1e6
+        assert not np.asarray(st.stack_overflow).any(), \
+            f"{engine}/{metric} B={b}: stack overflow"
+        assert not np.asarray(st.overflow).any(), \
+            f"{engine}/{metric} B={b}: result overflow (raise r_cap)"
+        if base is None:
+            base = st
+        sets_ok = st.result_sets() == base.result_sets()
+        nd_ok = np.array_equal(np.asarray(st.n_dist),
+                               np.asarray(base.n_dist))
+        assert sets_ok and nd_ok, \
+            f"{engine}/{metric} B={b}: parity broken (sets={sets_ok})"
+        rows.append({
+            "engine": engine, "metric": metric, "frontier": b,
+            "iters": int(st.iters),
+            "n_dist_total": int(np.sum(np.asarray(st.n_dist))),
+            "wall_us": round(wall_us, 1),
+            "identical_to_b1": bool(sets_ok and nd_ok),
+        })
+        r = rows[-1]
+        print(f"  {engine:5s} {metric:10s} B={b:2d}  iters={r['iters']:5d} "
+              f"n_dist={r['n_dist_total']:7d}  {r['wall_us']:9.0f} us")
+    return rows
+
+
+def main(*, n=2000, nq=32, repeat=3, json_path="BENCH_traversal.json",
+         widths=WIDTHS) -> dict:
+    # the first swept width is the parity baseline; keep 1 in front so
+    # every row is compared against the single-pop engine
+    widths = tuple(widths)
+    if widths[0] != 1:
+        widths = (1,) + tuple(b for b in widths if b != 1)
+    rows = []
+    print("engine  metric      B   iters  n_dist      wall/call")
+    for metric, t in CASES:
+        data, queries = make_space(metric, 8, n, nq)
+        ght = build_ght(data, metric, leaf_size=16, seed=1)
+        rows += _sweep("ght", search_binary_tree, ght, queries, t, metric,
+                       widths=widths, repeat=repeat)
+        sat = build_disat(data[: max(n // 2, 1)], metric, seed=2)
+        rows += _sweep("disat", search_sat, sat, queries, t, metric,
+                       widths=widths, repeat=repeat)
+
+    # headline ratios: iteration cut per engine at B=8 (the acceptance
+    # width) when swept, else the largest swept width > 1
+    b_hi = 8 if 8 in widths else \
+        (max(b for b in widths if b > 1) if len(widths) > 1 else 1)
+    summary = {}
+    for engine in ("ght", "disat"):
+        i1 = sum(r["iters"] for r in rows
+                 if r["engine"] == engine and r["frontier"] == 1)
+        ih = sum(r["iters"] for r in rows
+                 if r["engine"] == engine and r["frontier"] == b_hi)
+        summary[engine] = {
+            "iters_b1": i1, f"iters_b{b_hi}": ih,
+            f"iter_reduction_b{b_hi}": round(i1 / max(ih, 1), 2),
+        }
+        print(f"{engine}: iters B=1 {i1} -> B={b_hi} {ih} "
+              f"({summary[engine][f'iter_reduction_b{b_hi}']}x fewer)")
+
+    result = {
+        "bench": "traversal_throughput",
+        "n": n, "nq": nq, "dim": 8, "repeat": repeat,
+        "widths": list(widths),
+        "device": jax.devices()[0].platform,
+        "python": platform.python_version(),
+        "jax": jax.__version__,
+        "rows": rows,
+        "summary": summary,
+    }
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(result, f, indent=1)
+        print(f"wrote {json_path}")
+    return result
+
+
+if __name__ == "__main__":
+    main()

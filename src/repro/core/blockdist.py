@@ -1,14 +1,32 @@
-"""Per-query-lane block distances for batched tree traversal.
+"""Distance dispatch layer shared by traversal, brute force and serving.
 
-``block_distance(name, q, pts)``: q (Q, d), pts (Q, L, d) -> (Q, L)
-distances from each query lane to its own gathered block of L points.
-``one_distance(name, q, v)``: q (Q, d), v (Q, d) -> (Q,).
+Two shapes of evaluation, each with a pure-jnp reference path and a
+Pallas kernel path (``repro.kernels``):
 
-These are the traversal-side mirrors of repro.core.metrics; they avoid
-the full (Q, N) pairwise form because each lane gathers different rows.
+  ``block_distance(name, q, pts)``: q (Q, d), pts (Q, L, d) -> (Q, L)
+  lane-local distances from each query to its own gathered block — the
+  frontier-traversal shape, backed by ``kernels.gather_block``.
+
+  ``pairwise_distance(name, q, x)``: q (Q, d), x (N, d) -> (Q, N) dense
+  distances — the brute-force / serving shape, backed by
+  ``kernels.pairwise`` via ``kernels.ops``.
+
+  ``one_distance(name, q, v)``: q (Q, d), v (Q, d) -> (Q,).
+
+Implementation selection: the ``impl`` argument, else the
+``REPRO_GATHER_IMPL`` env var (``jnp`` | ``pallas``), default ``jnp``.
+The jnp path is the exactness reference (bit-stable across tile widths,
+which the frontier parity tests rely on); the pallas path is the TPU
+deployment path (interpret mode on CPU unless REPRO_PALLAS_COMPILED=1).
+
+``pts_norm_sq`` threads the per-tree squared-norm cache (flat.py
+``norm_sq``) through to the euclidean/cosine kernels so gathered tiles
+never re-reduce the d axis for norms.
 """
 
 from __future__ import annotations
+
+import os
 
 import jax.numpy as jnp
 
@@ -16,24 +34,30 @@ Array = jnp.ndarray
 
 _EPS = 1e-12
 
+DEFAULT_IMPL = os.environ.get("REPRO_GATHER_IMPL", "jnp")
+
 
 def _h(x: Array) -> Array:
     safe = jnp.where(x > _EPS, x, 1.0)
     return jnp.where(x > _EPS, -safe * jnp.log2(safe), 0.0)
 
 
-def block_distance(name: str, q: Array, pts: Array) -> Array:
-    """q: (Q, d), pts: (Q, L, d) -> (Q, L)."""
+def _block_distance_jnp(name: str, q: Array, pts: Array,
+                        pts_norm_sq: Array | None) -> Array:
     if name in ("euclidean", "sqeuclidean"):
         qq = jnp.sum(q * q, -1)[:, None]
-        pp = jnp.sum(pts * pts, -1)
+        pp = pts_norm_sq if pts_norm_sq is not None else \
+            jnp.sum(pts * pts, -1)
         qp = jnp.einsum("qd,qld->ql", q, pts)
         d2 = jnp.maximum(qq + pp - 2.0 * qp, 0.0)
         return d2 if name == "sqeuclidean" else jnp.sqrt(d2)
     if name in ("cosine", "angular"):
         qn = q / jnp.maximum(jnp.linalg.norm(q, axis=-1, keepdims=True), _EPS)
-        pn = pts / jnp.maximum(
-            jnp.linalg.norm(pts, axis=-1, keepdims=True), _EPS)
+        # sqrt(sum(x*x)) — the cache's expression, NOT linalg.norm (which
+        # differs by an ulp), so cached/on-the-fly paths are bit-identical
+        pp = pts_norm_sq if pts_norm_sq is not None else \
+            jnp.sum(pts * pts, -1)
+        pn = pts / jnp.maximum(jnp.sqrt(pp)[..., None], _EPS)
         sim = jnp.clip(jnp.einsum("qd,qld->ql", qn, pn), -1.0, 1.0)
         if name == "angular":
             return jnp.arccos(sim) / jnp.pi
@@ -57,6 +81,48 @@ def block_distance(name: str, q: Array, pts: Array) -> Array:
     raise KeyError(name)
 
 
-def one_distance(name: str, q: Array, v: Array) -> Array:
+def block_distance(name: str, q: Array, pts: Array, *,
+                   pts_norm_sq: Array | None = None,
+                   impl: str | None = None) -> Array:
+    """q: (Q, d), pts: (Q, L, d) -> (Q, L)."""
+    impl = DEFAULT_IMPL if impl is None else impl
+    if impl == "pallas":
+        from repro.kernels import gather_block, ops
+        kind = "cosine_prenorm" if name == "cosine" else name
+        if kind in gather_block.SUPPORTED:
+            if name == "cosine":
+                q = q / jnp.maximum(
+                    jnp.linalg.norm(q, axis=-1, keepdims=True), _EPS)
+            # ops.INTERPRET is THE CPU/TPU switch for every kernel
+            # family; read at trace time so both halves of the dispatch
+            # layer run in the same mode
+            return gather_block.gather_block_pallas(
+                q, pts, pts_norm_sq, kind, interpret=ops.INTERPRET)
+    elif impl != "jnp":
+        raise ValueError(f"unknown block-distance impl {impl!r}")
+    return _block_distance_jnp(name, q, pts, pts_norm_sq)
+
+
+def one_distance(name: str, q: Array, v: Array, *,
+                 impl: str | None = None) -> Array:
     """q: (Q, d), v: (Q, d) -> (Q,)."""
-    return block_distance(name, q, v[:, None, :])[:, 0]
+    impl = DEFAULT_IMPL if impl is None else impl
+    if impl not in ("jnp", "pallas"):
+        raise ValueError(f"unknown block-distance impl {impl!r}")
+    # lane tiles of width 1 always take the jnp path: a Pallas launch
+    # per single column would be pure overhead.
+    return _block_distance_jnp(name, q, v[:, None, :], None)[:, 0]
+
+
+def pairwise_distance(name: str, q: Array, x: Array, *,
+                      impl: str | None = None) -> Array:
+    """q: (Q, d), x: (N, d) -> (Q, N) dense pairwise distances."""
+    impl = DEFAULT_IMPL if impl is None else impl
+    if impl == "pallas":
+        from repro.kernels import ops
+        if name in ops.SUPPORTED:
+            return ops.pairwise_distance(q, x, name)
+    elif impl != "jnp":
+        raise ValueError(f"unknown pairwise impl {impl!r}")
+    from repro.core import metrics as metrics_lib
+    return metrics_lib.get(name).pairwise(q, x)

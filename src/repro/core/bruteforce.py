@@ -1,8 +1,10 @@
 """Exact brute-force scan — correctness oracle and the dense-retrieval
 backend (recsys ``retrieval_cand`` path).
 
-Dispatches to the Pallas pairwise kernels for MXU-friendly metrics when
-``use_kernels=True`` (interpret mode on CPU); otherwise pure jnp blocks.
+All distance evaluation goes through ``repro.core.blockdist`` — the
+kernel layer shared with traversal and serving — which dispatches to the
+Pallas pairwise kernels when REPRO_GATHER_IMPL=pallas and to pure jnp
+otherwise.
 """
 
 from __future__ import annotations
@@ -13,28 +15,32 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import metrics as metrics_lib
+from repro.core.blockdist import pairwise_distance
 
 Array = jnp.ndarray
+
+
+def _blocked(data: Array, n: int, block: int):
+    """(nblk, block, d) zero-padded view + (nblk, block) validity mask."""
+    nblk = (n + block - 1) // block
+    pad = nblk * block - n
+    dblk = jnp.pad(data, ((0, pad), (0, 0))).reshape(nblk, block, -1)
+    valid = (jnp.arange(nblk * block) < n).reshape(nblk, block)
+    return dblk, valid
 
 
 @functools.partial(jax.jit, static_argnames=("metric_name", "block"))
 def _range_counts(data: Array, queries: Array, t: Array, *,
                   metric_name: str, block: int) -> tuple[Array, Array]:
     """(counts (Q,), n_dist (Q,)) of exact range search via blocked scan."""
-    metric = metrics_lib.get(metric_name)
     nq = queries.shape[0]
     n = data.shape[0]
     t = jnp.broadcast_to(jnp.asarray(t, jnp.float32), (nq,))
-    nblk = (n + block - 1) // block
-    pad = nblk * block - n
-    dpad = jnp.pad(data, ((0, pad), (0, 0)))
-    dblk = dpad.reshape(nblk, block, -1)
-    valid = (jnp.arange(nblk * block) < n).reshape(nblk, block)
+    dblk, valid = _blocked(data, n, block)
 
     def scan_body(cnt, xs):
         blk, vmask = xs
-        d = metric.pairwise(queries, blk)            # (Q, block)
+        d = pairwise_distance(metric_name, queries, blk)   # (Q, block)
         hits = (d <= t[:, None]) & vmask[None, :]
         return cnt + jnp.sum(hits, axis=1, dtype=jnp.int32), None
 
@@ -43,25 +49,40 @@ def _range_counts(data: Array, queries: Array, t: Array, *,
     return cnt, jnp.full((nq,), n, jnp.int32)
 
 
+@functools.partial(jax.jit, static_argnames=("metric_name", "block"))
+def _range_hits(data: Array, queries: Array, t: Array, *,
+                metric_name: str, block: int) -> Array:
+    """(Q, nblk*block) bool hit mask via the jitted blocked scan — one
+    device program regardless of n (padded columns are False)."""
+    nq = queries.shape[0]
+    n = data.shape[0]
+    t = jnp.broadcast_to(jnp.asarray(t, jnp.float32), (nq,))
+    dblk, valid = _blocked(data, n, block)
+
+    def scan_body(_, xs):
+        blk, vmask = xs
+        d = pairwise_distance(metric_name, queries, blk)   # (Q, block)
+        return None, (d <= t[:, None]) & vmask[None, :]
+
+    _, hits = jax.lax.scan(scan_body, None, (dblk, valid))  # (nblk, Q, blk)
+    return jnp.moveaxis(hits, 0, 1).reshape(nq, -1)
+
+
 def range_search(data, queries, t, *, metric_name: str,
                  block: int = 8192) -> tuple[np.ndarray, list[set[int]]]:
     """Exact range search. Returns (counts, per-query id sets).
 
-    The id sets are produced host-side from a (Q, n) boolean — intended
-    for test-sized n. For large n use ``range_counts``.
+    The scan itself is the jitted blocked kernel (scales with n); only
+    the id-set materialisation is host-side, from the (Q, n) boolean.
+    For count-only workloads at large n use ``range_counts``.
     """
-    metric = metrics_lib.get(metric_name)
     data = jnp.asarray(data, jnp.float32)
     queries = jnp.asarray(queries, jnp.float32)
-    nq = queries.shape[0]
-    t_arr = jnp.broadcast_to(jnp.asarray(t, jnp.float32), (nq,))
-    hits_np = []
-    n = data.shape[0]
-    for s in range(0, n, block):
-        d = metric.pairwise(queries, data[s:s + block])
-        hits_np.append(np.asarray(d <= t_arr[:, None]))
-    hits = np.concatenate(hits_np, axis=1)
-    sets = [set(np.nonzero(hits[i])[0].tolist()) for i in range(nq)]
+    hits = np.asarray(_range_hits(data, queries, t,
+                                  metric_name=metric_name,
+                                  block=block))[:, :data.shape[0]]
+    sets = [set(np.nonzero(hits[i])[0].tolist())
+            for i in range(hits.shape[0])]
     return hits.sum(axis=1), sets
 
 
@@ -78,7 +99,6 @@ def knn(data: Array, queries: Array, *, metric_name: str,
         k: int) -> tuple[Array, Array]:
     """Exact k-NN: (distances (Q,k), ids (Q,k)). Single pairwise block —
     used by the retrieval serving path where n fits (10^6 x d)."""
-    metric = metrics_lib.get(metric_name)
-    d = metric.pairwise(queries, data)
+    d = pairwise_distance(metric_name, queries, data)
     neg, idx = jax.lax.top_k(-d, k)
     return -neg, idx

@@ -59,6 +59,7 @@ def _pad_tree(tree: BinaryHyperplaneTree, n_nodes: int, n_bucket: int
         right=pad1(tree.right, n_nodes, -1),
         leaf_start=pad1(tree.leaf_start, n_nodes, 0),
         leaf_count=pad1(tree.leaf_count, n_nodes, 0),
+        norm_sq=tree.norm_sq,
     )
 
 
@@ -90,7 +91,9 @@ def build_forest(data: np.ndarray, metric_name: str, mesh: Mesh,
         t = _pad_tree(t, n_nodes, n_bucket)
         dpad = np.zeros((n_pts, t.data.shape[1]), np.float32)
         dpad[:t.data.shape[0]] = t.data
-        t = dataclasses.replace(t, data=dpad)
+        npad = np.zeros((n_pts,), np.float32)
+        npad[:t.norm_sq.shape[0]] = t.norm_sq
+        t = dataclasses.replace(t, data=dpad, norm_sq=npad)
         padded.append(t)
     stacked = jax.tree_util.tree_map(
         lambda *xs: np.stack(xs, axis=0), *padded)
@@ -106,7 +109,7 @@ def build_forest(data: np.ndarray, metric_name: str, mesh: Mesh,
 
 def forest_search(forest: ShardedForest, queries, t, *, metric_name: str,
                   mechanism: str = "hilbert", r_cap: int = 64,
-                  stack_cap: int = 128):
+                  stack_cap: int = 256, frontier: int = 8):
     """Replicated-query forest search.
 
     Returns (res_ids (Q, n_shards*r_cap) global ids, res_cnt (Q,),
@@ -121,7 +124,7 @@ def forest_search(forest: ShardedForest, queries, t, *, metric_name: str,
 
     @partial(shard_map, mesh=mesh,
              in_specs=(tree_specs, P(axis), P(), P()),
-             out_specs=(P(None, axis), P(), P()),
+             out_specs=(P(None, axis), P(), P(), P(), P()),
              check_rep=False)
     def _run(tree, id_off, q, tt):
         # leading shard axis has local length 1 inside the map
@@ -129,12 +132,28 @@ def forest_search(forest: ShardedForest, queries, t, *, metric_name: str,
         stats = _search_binary(
             tree, q, tt, metric_name=metric_name, mechanism=mechanism,
             r_cap=r_cap, stack_cap=stack_cap, leaf_cap=max(leaf_cap, 1),
-            use_cover_radius=True)
+            frontier=frontier, use_cover_radius=True)
         valid = stats.res_ids >= 0
         gids = jnp.where(valid, stats.res_ids + id_off[0, 0], -1)
         cnt = jax.lax.psum(stats.res_cnt, axis)
         nd = jax.lax.psum(stats.n_dist, axis)
-        return gids, cnt, nd
+        n_sovf = jax.lax.psum(
+            jnp.sum(stats.stack_overflow.astype(jnp.int32)), axis)
+        n_rovf = jax.lax.psum(
+            jnp.sum(stats.overflow.astype(jnp.int32)), axis)
+        return gids, cnt, nd, n_sovf, n_rovf
 
-    gids, cnt, nd = _run(forest.trees, forest.id_offset, queries, tq)
+    gids, cnt, nd, n_sovf, n_rovf = _run(forest.trees, forest.id_offset,
+                                         queries, tq)
+    # exactness contract: a dropped stack entry or result slot means the
+    # returned sets are silently truncated — refuse to return them
+    if int(n_sovf):
+        raise RuntimeError(
+            f"forest_search: traversal stack overflow on {int(n_sovf)} "
+            f"(query, shard) lanes — raise stack_cap (={stack_cap}) or "
+            f"lower frontier (={frontier})")
+    if int(n_rovf):
+        raise RuntimeError(
+            f"forest_search: result buffer overflow on {int(n_rovf)} "
+            f"(query, shard) lanes — raise r_cap (={r_cap})")
     return gids, cnt, nd

@@ -74,6 +74,14 @@ def _one_to_many(metric_name: str, q: np.ndarray, x: np.ndarray) -> np.ndarray:
     return _np_pairwise(metric_name, q[None, :], x)[0]
 
 
+def _norm_sq_cache(data: np.ndarray) -> np.ndarray:
+    """Per-point |x|^2 in f32 — the gather-kernel norm cache.  Computed on
+    the f32 rows exactly as the traversal would (same reduction input), so
+    cached and on-the-fly norms agree."""
+    d32 = np.asarray(data, np.float32)
+    return np.add.reduce(d32 * d32, axis=-1, dtype=np.float32)
+
+
 # ---------------------------------------------------------------------------
 # GHT / MHT
 # ---------------------------------------------------------------------------
@@ -213,6 +221,7 @@ def _build_binary(data: np.ndarray, metric_name: str, *, monotonous: bool,
         right=np.asarray(nodes.right, np.int32),
         leaf_start=np.asarray(nodes.ls, np.int32),
         leaf_count=np.asarray(nodes.lc, np.int32),
+        norm_sq=_norm_sq_cache(data),
     )
 
 
@@ -333,4 +342,5 @@ def build_disat(data, metric_name: str, *, seed: int = 0,
         d_parent=d_parent.astype(np.float32),
         sib_off=sib_off.astype(np.int32),
         sib_d=sib_d,
+        norm_sq=_norm_sq_cache(data),
     )

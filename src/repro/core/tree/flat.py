@@ -46,6 +46,9 @@ class BinaryHyperplaneTree:
                       (bisector-tree cover radii; paper §6.3 uses both
                       cover-radius and hyperplane exclusion)
       left, right   : child node ids (p1 side / p2 side)
+      norm_sq       : per-point |x|^2 cache (DESIGN.md §3): lets the
+                      gather-distance kernels skip recomputing row norms
+                      for every gathered tile (euclidean/cosine MXU path)
     """
     data: Any          # (n, d) permuted points
     perm: Any          # (n,) permuted position -> original id
@@ -59,6 +62,7 @@ class BinaryHyperplaneTree:
     right: Any         # (m,) int32
     leaf_start: Any    # (m,) int32
     leaf_count: Any    # (m,) int32
+    norm_sq: Any       # (n,) f32
 
     @property
     def n_nodes(self) -> int:
@@ -98,6 +102,7 @@ class SATree:
     d_parent: Any     # (n,) f32
     sib_off: Any      # (n,) int32
     sib_d: Any        # (total_sib_entries,) f32
+    norm_sq: Any      # (n,) f32 per-point |x|^2 cache (DESIGN.md §3)
 
     @property
     def n_points(self) -> int:

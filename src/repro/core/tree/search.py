@@ -1,17 +1,27 @@
-"""Jittable batched tree traversal with selectable exclusion mechanism.
+"""Jittable frontier-batched tree traversal with selectable exclusion.
 
-Both engines run all query lanes in lockstep: each ``lax.while_loop``
-iteration pops one node per lane, evaluates the lane's query-to-pivot
-distances (the paper's unit of cost — counted exactly), applies the
-selected exclusion (hyperbolic / hilbert) plus cover-radius exclusion,
-and pushes surviving children.  Lanes with empty stacks idle (masked).
+Both engines run all query lanes in lockstep around a width-B *frontier*
+(DESIGN.md §3): each ``lax.while_loop`` iteration pops up to ``frontier``
+nodes per lane, gathers all their pivots / children / leaf points into
+ONE dense (Q, tile, d) block, evaluates every query-to-object distance
+in a single fused ``block_distance`` call (the paper's unit of cost —
+counted exactly), applies the selected exclusion (hyperbolic / hilbert)
+plus cover-radius exclusion vectorized over the whole frontier, and
+multi-pushes all surviving children.  Lanes with short stacks pop fewer
+nodes (masked); empty lanes idle.
+
+Because every exclusion decision depends only on local geometry (the
+query's distances to one node's pivots), the visited-node set — and
+therefore the result set and the per-query distance count — is invariant
+to pop order and frontier width.  ``frontier=1`` IS the classic one-node-
+per-iteration engine; the parity tests assert B>1 reproduces it exactly.
 
 Exact range search: for the same (tree, queries, t) every mechanism must
 return the identical result set (paper §6.5); tests assert this.
 
-Static jit arguments: metric name, mechanism, buffer sizes.  The tree is
-a dynamic pytree operand, so one compilation serves every tree of the
-same shape.
+Static jit arguments: metric name, mechanism, buffer sizes, frontier
+width.  The tree is a dynamic pytree operand, so one compilation serves
+every tree of the same shape.
 """
 
 from __future__ import annotations
@@ -46,7 +56,7 @@ class SearchStats:
     overflow: (Q,) result buffer overflow
     stack_overflow: (Q,) traversal stack overflow (correctness violated if
               set — sized so tests prove it never fires)
-    iters:    () loop iterations executed
+    iters:    () loop iterations executed (each evaluates one frontier)
     """
     res_ids: Any
     res_cnt: Any
@@ -96,19 +106,51 @@ def _append_results(res_ids, res_cnt, overflow, lane, ids, hits, r_cap):
     return res_ids, res_cnt, overflow
 
 
+def _pop_frontier(stack_n, stack_d, sp, b_cap: int, stack_cap: int):
+    """Pop up to ``b_cap`` nodes per lane off the stack tops.
+
+    Returns (node (Q, B), carried (Q, B), fvalid (Q, B), new sp).  Slot
+    j holds the j-th-from-top entry; invalid slots are clamped to node 0
+    and must be masked via fvalid.
+    """
+    j = jnp.arange(b_cap, dtype=_I32)[None, :]
+    npop = jnp.minimum(sp, b_cap)
+    fvalid = j < npop[:, None]
+    pos = jnp.clip(sp[:, None] - 1 - j, 0, max(stack_cap - 1, 0))
+    node = jnp.take_along_axis(stack_n, pos, 1)
+    carried = jnp.take_along_axis(stack_d, pos, 1)
+    node = jnp.where(fvalid, node, 0)
+    return node, carried, fvalid, sp - npop
+
+
+def _multi_push(stack_n, stack_d, sp, stack_ovf, lane, nodes, dists, mask,
+                stack_cap: int):
+    """Push masked (Q, W) candidates; candidate order = push order, so
+    later columns end nearer the stack top."""
+    pos = sp[:, None] + jnp.cumsum(mask.astype(_I32), axis=1) - 1
+    wpos = jnp.where(mask, pos, stack_cap)        # stack_cap col == dropped
+    stack_n = stack_n.at[lane[:, None], wpos].set(nodes, mode="drop")
+    stack_d = stack_d.at[lane[:, None], wpos].set(dists, mode="drop")
+    sp = sp + jnp.sum(mask, axis=1).astype(_I32)
+    stack_ovf = stack_ovf | (sp > stack_cap)
+    return stack_n, stack_d, sp, stack_ovf
+
+
 # ---------------------------------------------------------------------------
 # binary (GHT / MHT)
 # ---------------------------------------------------------------------------
 
 @functools.partial(
     jax.jit, static_argnames=("metric_name", "mechanism", "r_cap",
-                              "stack_cap", "leaf_cap", "use_cover_radius"))
+                              "stack_cap", "leaf_cap", "frontier",
+                              "use_cover_radius"))
 def _search_binary(tree: BinaryHyperplaneTree, queries: Array, t: Array,
                    *, metric_name: str, mechanism: str, r_cap: int,
-                   stack_cap: int, leaf_cap: int,
+                   stack_cap: int, leaf_cap: int, frontier: int = 1,
                    use_cover_radius: bool) -> SearchStats:
     nq = queries.shape[0]
     n = tree.data.shape[0]
+    b_cap = frontier
     lane = jnp.arange(nq, dtype=_I32)
     t = jnp.broadcast_to(jnp.asarray(t, jnp.float32), (nq,))
 
@@ -129,77 +171,82 @@ def _search_binary(tree: BinaryHyperplaneTree, queries: Array, t: Array,
     def body(st):
         (stack_n, stack_d, sp, res_ids, res_cnt, n_dist, overflow,
          stack_ovf, it) = st
-        active = sp > 0
-        top = jnp.maximum(sp - 1, 0)
-        node = jnp.take_along_axis(stack_n, top[:, None], 1)[:, 0]
-        carried = jnp.take_along_axis(stack_d, top[:, None], 1)[:, 0]
-        sp = sp - active.astype(_I32)
+        node, carried, fvalid, sp = _pop_frontier(
+            stack_n, stack_d, sp, b_cap, stack_cap)     # all (Q, B)
 
         left = tree.left[node]
         right = tree.right[node]
-        is_int = (left >= 0) & active
-        is_leaf = (left < 0) & active
+        is_int = (left >= 0) & fvalid
+        is_leaf = (left < 0) & fvalid
 
-        # ---- internal node ------------------------------------------------
-        p1 = tree.p1[node]
+        # ---- frontier gather: pivots + leaf buckets as ONE dense tile --
+        p1 = tree.p1[node]                               # (Q, B)
         p2 = tree.p2[node]
         d12 = tree.d12[node]
         inh = tree.p1_inherited[node] == 1
-        same_pivot = p1 == p2                     # ball-fallback node
-        p1v = tree.data[jnp.clip(p1, 0, n - 1)]
-        p2v = tree.data[jnp.clip(p2, 0, n - 1)]
-        d1f = one_distance(metric_name, queries, p1v)
-        d2c = one_distance(metric_name, queries, p2v)
+        same_pivot = p1 == p2                            # ball-fallback node
+        start = tree.leaf_start[node]
+        cnt = tree.leaf_count[node]
+        lcols = jnp.arange(leaf_cap, dtype=_I32)[None, None, :]
+        lmask = is_leaf[:, :, None] & (lcols < cnt[:, :, None])  # (Q, B, L)
+        bslot = jnp.clip(start[:, :, None] + lcols, 0,
+                         jnp.maximum(tree.perm.shape[0] - 1, 0))
+        bidx = tree.perm[bslot] if tree.perm.shape[0] else \
+            jnp.zeros((nq, b_cap, leaf_cap), _I32)
+
+        tile_idx = jnp.concatenate(
+            [jnp.clip(p1, 0, n - 1), jnp.clip(p2, 0, n - 1),
+             bidx.reshape(nq, b_cap * leaf_cap)], axis=1)
+        dtile = block_distance(
+            metric_name, queries, tree.data[tile_idx],
+            pts_norm_sq=tree.norm_sq[tile_idx])          # (Q, B(2+L))
+        d1f = dtile[:, :b_cap]
+        d2c = dtile[:, b_cap:2 * b_cap]
+        dl = dtile[:, 2 * b_cap:].reshape(nq, b_cap, leaf_cap)
+
+        # ---- internal nodes -------------------------------------------
         d1 = jnp.where(inh, carried, d1f)
         d2 = jnp.where(same_pivot, d1, d2c)
         # fresh distances: p1 unless inherited, p2 unless it IS p1
-        n_dist = n_dist + jnp.where(
+        n_dist = n_dist + jnp.sum(jnp.where(
             is_int,
             (1 - inh.astype(_I32)) + (1 - same_pivot.astype(_I32)),
-            0)
-        hit_p1 = is_int & ~inh & (d1f <= t)
-        hit_p2 = is_int & ~same_pivot & (d2 <= t)
+            0), axis=1)
+        tq = t[:, None]
+        hit_p1 = is_int & ~inh & (d1f <= tq)
+        hit_p2 = is_int & ~same_pivot & (d2 <= tq)
 
         m = _margin(mechanism, d1, d2, d12)
-        excl_l = m > t
-        excl_r = (-m) > t
+        excl_l = m > tq
+        excl_r = (-m) > tq
         if use_cover_radius:
-            excl_l = excl_l | (d1 > tree.cover_r1[node] + t)
-            excl_r = excl_r | (d2 > tree.cover_r2[node] + t)
+            excl_l = excl_l | (d1 > tree.cover_r1[node] + tq)
+            excl_r = excl_r | (d2 > tree.cover_r2[node] + tq)
         push_l = is_int & ~excl_l
         push_r = is_int & ~excl_r
 
-        # ---- leaf ----------------------------------------------------------
-        start = tree.leaf_start[node]
-        cnt = tree.leaf_count[node]
-        cols = jnp.arange(leaf_cap, dtype=_I32)[None, :]
-        lmask = is_leaf[:, None] & (cols < cnt[:, None])
-        bslot = jnp.clip(start[:, None] + cols, 0,
-                         jnp.maximum(tree.perm.shape[0] - 1, 0))
-        bidx = tree.perm[bslot] if tree.perm.shape[0] else \
-            jnp.zeros((nq, leaf_cap), _I32)
-        pts = tree.data[bidx]                            # (Q, L, d)
-        dl = block_distance(metric_name, queries, pts)
-        n_dist = n_dist + jnp.sum(lmask, axis=1).astype(_I32)
-        lhit = lmask & (dl <= t[:, None])
+        # ---- leaves ----------------------------------------------------
+        n_dist = n_dist + jnp.sum(lmask, axis=(1, 2)).astype(_I32)
+        lhit = lmask & (dl <= tq[:, :, None])
 
         # ---- results ---------------------------------------------------
-        ids = jnp.concatenate([p1[:, None], p2[:, None], bidx], axis=1)
+        ids = jnp.concatenate(
+            [p1, p2, bidx.reshape(nq, b_cap * leaf_cap)], axis=1)
         hms = jnp.concatenate(
-            [hit_p1[:, None], hit_p2[:, None], lhit], axis=1)
+            [hit_p1, hit_p2, lhit.reshape(nq, b_cap * leaf_cap)], axis=1)
         res_ids, res_cnt, overflow = _append_results(
             res_ids, res_cnt, overflow, lane, ids, hms, r_cap)
 
-        # ---- pushes (right first => left explored first) -----------------
-        wr = jnp.where(push_r, sp, stack_cap)
-        stack_n = stack_n.at[lane, wr].set(right, mode="drop")
-        stack_d = stack_d.at[lane, wr].set(d2, mode="drop")
-        sp = sp + push_r.astype(_I32)
-        wl = jnp.where(push_l, sp, stack_cap)
-        stack_n = stack_n.at[lane, wl].set(left, mode="drop")
-        stack_d = stack_d.at[lane, wl].set(d1, mode="drop")
-        sp = sp + push_l.astype(_I32)
-        stack_ovf = stack_ovf | (sp > stack_cap)
+        # ---- multi-push ------------------------------------------------
+        # Frontier slot 0 was the stack top: flip so ITS children are
+        # pushed last (back on top), keeping depth-first stack growth;
+        # within a node, right before left => left explored first.
+        cand_n = jnp.flip(jnp.stack([right, left], 2), 1).reshape(nq, -1)
+        cand_d = jnp.flip(jnp.stack([d2, d1], 2), 1).reshape(nq, -1)
+        cand_m = jnp.flip(jnp.stack([push_r, push_l], 2), 1).reshape(nq, -1)
+        stack_n, stack_d, sp, stack_ovf = _multi_push(
+            stack_n, stack_d, sp, stack_ovf, lane, cand_n, cand_d, cand_m,
+            stack_cap)
 
         return (stack_n, stack_d, sp, res_ids, res_cnt, n_dist, overflow,
                 stack_ovf, it + 1)
@@ -214,17 +261,28 @@ def _search_binary(tree: BinaryHyperplaneTree, queries: Array, t: Array,
 
 def search_binary_tree(tree: BinaryHyperplaneTree, queries, t, *,
                        metric_name: str, mechanism: str = "hilbert",
-                       r_cap: int = 128, stack_cap: int = 128,
+                       r_cap: int = 128, stack_cap: int = 256,
+                       frontier: int = 8,
                        use_cover_radius: bool = True) -> SearchStats:
-    """Range search on a GHT/MHT.  mechanism in {'hyperbolic','hilbert'}."""
+    """Range search on a GHT/MHT.  mechanism in {'hyperbolic','hilbert'}.
+
+    ``frontier``: nodes popped per lane per iteration (static).  Any
+    B >= 1 returns the identical result set and identical per-query
+    ``n_dist``; larger B cuts loop trip count ~B× and widens each
+    distance tile by the same factor (DESIGN.md §3).  ``stack_cap``
+    (default 256) must absorb the extra in-flight breadth; the
+    ``stack_overflow`` flag reports violations.
+    """
     _check_mechanism(metric_name, mechanism)
+    if frontier < 1:
+        raise ValueError(f"frontier must be >= 1, got {frontier}")
     leaf_cap = int(np.max(np.asarray(tree.leaf_count))) if \
         tree.leaf_count.shape[0] else 1
     tree = jax.tree_util.tree_map(jnp.asarray, tree)
     return _search_binary(
         tree, jnp.asarray(queries, jnp.float32), t,
         metric_name=metric_name, mechanism=mechanism, r_cap=r_cap,
-        stack_cap=stack_cap, leaf_cap=max(leaf_cap, 1),
+        stack_cap=stack_cap, leaf_cap=max(leaf_cap, 1), frontier=frontier,
         use_cover_radius=use_cover_radius)
 
 
@@ -234,13 +292,14 @@ def search_binary_tree(tree: BinaryHyperplaneTree, queries, t, *,
 
 @functools.partial(
     jax.jit, static_argnames=("metric_name", "mechanism", "r_cap",
-                              "stack_cap", "fan_cap", "use_cover_radius"))
+                              "stack_cap", "fan_cap", "frontier",
+                              "use_cover_radius"))
 def _search_sat(tree: SATree, queries: Array, t: Array, *,
                 metric_name: str, mechanism: str, r_cap: int,
-                stack_cap: int, fan_cap: int,
+                stack_cap: int, fan_cap: int, frontier: int = 1,
                 use_cover_radius: bool) -> SearchStats:
     nq = queries.shape[0]
-    n = tree.data.shape[0]
+    b_cap = frontier
     lane = jnp.arange(nq, dtype=_I32)
     t = jnp.broadcast_to(jnp.asarray(t, jnp.float32), (nq,))
 
@@ -263,7 +322,7 @@ def _search_sat(tree: SATree, queries: Array, t: Array, *,
     sp = jnp.ones((nq,), _I32)
     n_dist = jnp.ones((nq,), _I32)
     stack_ovf = jnp.zeros((nq,), bool)
-    max_iter = n + 8
+    max_iter = tree.data.shape[0] + 8
 
     def cond(st):
         (_, _, sp, _, _, _, _, _, it) = st
@@ -272,73 +331,77 @@ def _search_sat(tree: SATree, queries: Array, t: Array, *,
     def body(st):
         (stack_n, stack_d, sp, res_ids, res_cnt, n_dist, overflow,
          stack_ovf, it) = st
-        active = sp > 0
-        top = jnp.maximum(sp - 1, 0)
-        node = jnp.take_along_axis(stack_n, top[:, None], 1)[:, 0]
-        d_self = jnp.take_along_axis(stack_d, top[:, None], 1)[:, 0]
-        sp = sp - active.astype(_I32)
+        node, d_self, fvalid, sp = _pop_frontier(
+            stack_n, stack_d, sp, b_cap, stack_cap)     # all (Q, B)
 
+        # ---- frontier gather: every popped node's children, one tile --
         off = tree.child_start[node]
         fcnt = tree.child_count[node]
-        cols = jnp.arange(fan_cap, dtype=_I32)[None, :]
-        cmask = active[:, None] & (cols < fcnt[:, None])
-        cslot = jnp.clip(off[:, None] + cols, 0,
+        fcols = jnp.arange(fan_cap, dtype=_I32)[None, None, :]
+        cmask = fvalid[:, :, None] & (fcols < fcnt[:, :, None])  # (Q,B,F)
+        cslot = jnp.clip(off[:, :, None] + fcols, 0,
                          jnp.maximum(tree.child_ids.shape[0] - 1, 0))
         cids = tree.child_ids[cslot] if tree.child_ids.shape[0] else \
-            jnp.zeros((nq, fan_cap), _I32)
-        pts = tree.data[cids]                          # (Q, F, d)
-        dc = block_distance(metric_name, queries, pts)  # (Q, F)
+            jnp.zeros((nq, b_cap, fan_cap), _I32)
+        cflat = cids.reshape(nq, b_cap * fan_cap)
+        dc = block_distance(
+            metric_name, queries, tree.data[cflat],
+            pts_norm_sq=tree.norm_sq[cflat]
+        ).reshape(nq, b_cap, fan_cap)                    # (Q, B, F)
         dc = jnp.where(cmask, dc, jnp.inf)
-        n_dist = n_dist + jnp.sum(cmask, axis=1).astype(_I32)
+        n_dist = n_dist + jnp.sum(cmask, axis=(1, 2)).astype(_I32)
 
-        hits = cmask & (dc <= t[:, None])
+        hits = cmask & (dc <= t[:, None, None])
         res_ids, res_cnt, overflow = _append_results(
-            res_ids, res_cnt, overflow, lane, cids, hits, r_cap)
+            res_ids, res_cnt, overflow, lane, cflat,
+            hits.reshape(nq, b_cap * fan_cap), r_cap)
 
-        # winner c* over children ∪ {self}
-        cmin_idx = jnp.argmin(dc, axis=1)              # (Q,)
-        cmin = jnp.take_along_axis(dc, cmin_idx[:, None], 1)[:, 0]
+        # winner c* over children ∪ {self}, per popped node
+        cmin_idx = jnp.argmin(dc, axis=2)                # (Q, B)
+        cmin = jnp.take_along_axis(dc, cmin_idx[:, :, None], 2)[:, :, 0]
         self_wins = d_self < cmin
         dmin = jnp.minimum(cmin, d_self)
 
         if mechanism == "hilbert":
             # denominator: d(c, c*) — sibling matrix row, or d(c, parent)
-            f = fcnt[:, None]
-            sib_base = tree.sib_off[node][:, None]
-            sib_idx = sib_base + cols * f + cmin_idx[:, None]
+            f = fcnt[:, :, None]
+            sib_base = tree.sib_off[node][:, :, None]
+            sib_idx = sib_base + fcols * f + cmin_idx[:, :, None]
             sib_idx = jnp.clip(sib_idx, 0,
                                jnp.maximum(tree.sib_d.shape[0] - 1, 0))
             d_c_cstar = tree.sib_d[sib_idx] if tree.sib_d.shape[0] else \
-                jnp.ones((nq, fan_cap), jnp.float32)
-            d_den = jnp.where(self_wins[:, None], tree.d_parent[cids],
+                jnp.ones((nq, b_cap, fan_cap), jnp.float32)
+            d_den = jnp.where(self_wins[:, :, None], tree.d_parent[cids],
                               d_c_cstar)
             # Never exclude the winner itself (its margin is an exact 0
             # eagerly but FMA-contracted noise over a ~0 denominator in
             # fused loops), and never divide by a near-degenerate
             # bisector (< 1e-6: near-duplicate pivots define no usable
             # hyperplane).
-            is_winner = (~self_wins[:, None]) & (cols == cmin_idx[:, None])
+            is_winner = (~self_wins[:, :, None]) & \
+                (fcols == cmin_idx[:, :, None])
             margin = jnp.where(
                 (d_den > 1e-6) & ~is_winner,
-                (dc * dc - dmin[:, None] ** 2) /
+                (dc * dc - dmin[:, :, None] ** 2) /
                 (2.0 * jnp.maximum(d_den, 1e-12)),
                 -jnp.inf)
         else:
-            margin = (dc - dmin[:, None]) * 0.5
-        excl_c = margin > t[:, None]
+            margin = (dc - dmin[:, :, None]) * 0.5
+        excl_c = margin > t[:, None, None]
         if use_cover_radius:
-            excl_c = excl_c | (dc > tree.cover_r[cids] + t[:, None])
+            excl_c = excl_c | (dc > tree.cover_r[cids] + t[:, None, None])
         has_kids = tree.child_count[cids] > 0
         push = cmask & ~excl_c & has_kids
 
-        # batched multi-push
-        pos = sp[:, None] + jnp.cumsum(push.astype(_I32), axis=1) - 1
-        wpos = jnp.where(push, pos, stack_cap)
-        stack_n = stack_n.at[lane[:, None], wpos].set(cids, mode="drop")
-        stack_d = stack_d.at[lane[:, None], wpos].set(
-            jnp.where(jnp.isfinite(dc), dc, 0.0), mode="drop")
-        sp = sp + jnp.sum(push, axis=1).astype(_I32)
-        stack_ovf = stack_ovf | (sp > stack_cap)
+        # ---- multi-push: flip so the top-popped node's children land
+        # back on top (depth-first growth); child order kept distal.
+        cand_n = jnp.flip(cids, 1).reshape(nq, -1)
+        cand_d = jnp.flip(jnp.where(jnp.isfinite(dc), dc, 0.0),
+                          1).reshape(nq, -1)
+        cand_m = jnp.flip(push, 1).reshape(nq, -1)
+        stack_n, stack_d, sp, stack_ovf = _multi_push(
+            stack_n, stack_d, sp, stack_ovf, lane, cand_n, cand_d, cand_m,
+            stack_cap)
 
         return (stack_n, stack_d, sp, res_ids, res_cnt, n_dist, overflow,
                 stack_ovf, it + 1)
@@ -353,14 +416,22 @@ def _search_sat(tree: SATree, queries: Array, t: Array, *,
 
 def search_sat(tree: SATree, queries, t, *, metric_name: str,
                mechanism: str = "hilbert", r_cap: int = 128,
-               stack_cap: int = 4096,
+               stack_cap: int = 4096, frontier: int = 8,
                use_cover_radius: bool = True) -> SearchStats:
-    """Range search on a DiSAT.  mechanism in {'hyperbolic','hilbert'}."""
+    """Range search on a DiSAT.  mechanism in {'hyperbolic','hilbert'}.
+
+    ``frontier``: nodes popped per lane per iteration (static); result
+    sets and per-query ``n_dist`` are identical for every B >= 1
+    (DESIGN.md §3).  ``stack_cap`` (default 4096) bounds in-flight
+    breadth; ``stack_overflow`` reports violations.
+    """
     _check_mechanism(metric_name, mechanism)
+    if frontier < 1:
+        raise ValueError(f"frontier must be >= 1, got {frontier}")
     fan_cap = max(tree.max_fanout, 1)
     tree = jax.tree_util.tree_map(jnp.asarray, tree)
     return _search_sat(
         tree, jnp.asarray(queries, jnp.float32), t,
         metric_name=metric_name, mechanism=mechanism, r_cap=r_cap,
-        stack_cap=stack_cap, fan_cap=fan_cap,
+        stack_cap=stack_cap, fan_cap=fan_cap, frontier=frontier,
         use_cover_radius=use_cover_radius)

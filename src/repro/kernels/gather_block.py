@@ -1,0 +1,170 @@
+"""Pallas TPU kernels: gather-block distances for frontier traversal.
+
+The frontier-batched engines (DESIGN.md §3) gather, per query lane, one
+tile of L candidate points — pivots, children and leaf buckets of every
+node in the lane's frontier — and need d(q_i, tile_i[l]) for all (i, l).
+That is the *lane-local* shape (Q, L, d) -> (Q, L), distinct from the
+dense (Q, N) pairwise family in ``pairwise.py``: each lane contracts
+against its own points, so the contraction is a batched GEMV, not a
+GEMM.
+
+Two kernel families, mirroring pairwise.py:
+
+  * MXU family (euclidean / sqeuclidean / cosine): the cross term is a
+    batched dot ``q[i] . pts[i, l]`` via ``dot_general`` with a batch
+    dimension; the |x|^2 / |x| terms come from the per-tree squared-norm
+    cache (``flat.py norm_sq``) gathered alongside the tile, so the
+    kernel never re-reduces the d axis for norms.
+
+  * VPU family (jsd / triangular): elementwise O(Q*L*d) accumulation
+    over the (BQ, BL, d) broadcast, VMEM-resident.
+
+Grid is (Q tiles, L tiles); the d axis stays whole per block (metric-
+search dimensionalities are small, padded to a 128 lane multiple).  All
+inputs are zero-padded by the wrapper: h(0)=0, 0/0 guarded, zero rows
+produce garbage *distances* only in padded slots, which every caller
+masks (traversal masks invalid frontier slots anyway).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.pairwise import _h
+
+_EPS = 1e-12
+
+# (BQ, BL): MXU family rides the batched-dot path with full 128 lanes;
+# VPU family keeps the (BQ, BL, d) broadcast under ~1 MiB of VMEM.
+_BLOCKS = {
+    "euclidean": (8, 128),
+    "sqeuclidean": (8, 128),
+    "cosine_prenorm": (8, 128),
+    "jsd": (8, 32),
+    "triangular": (8, 32),
+}
+
+SUPPORTED = frozenset(_BLOCKS)
+
+
+def _batched_dot(q, pts):
+    """q (BQ, d) . pts (BQ, BL, d) -> (BQ, BL) lane-local contraction."""
+    return jax.lax.dot_general(
+        q, pts, (((1,), (2,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)
+
+
+def _gather_l2_kernel(q_ref, pts_ref, pp_ref, o_ref, *, squared: bool):
+    """|q|^2 + |p|^2 - 2 q.p with |p|^2 from the gathered norm cache."""
+    q = q_ref[...].astype(jnp.float32)            # (BQ, d)
+    pts = pts_ref[...].astype(jnp.float32)        # (BQ, BL, d)
+    qq = jnp.sum(q * q, axis=-1)[:, None]
+    d2 = jnp.maximum(qq + pp_ref[...] - 2.0 * _batched_dot(q, pts), 0.0)
+    o_ref[...] = d2 if squared else jnp.sqrt(d2)
+
+
+def _gather_cos_kernel(q_ref, pts_ref, pp_ref, o_ref):
+    """sqrt(1 - cos) on pre-normalised q rows; tile rows are normalised
+    in-kernel by the cached norms (one rsqrt per point, no d-reduction)."""
+    q = q_ref[...].astype(jnp.float32)
+    pts = pts_ref[...].astype(jnp.float32)
+    inv = 1.0 / jnp.maximum(jnp.sqrt(pp_ref[...]), _EPS)
+    sim = jnp.clip(_batched_dot(q, pts) * inv, -1.0, 1.0)
+    o_ref[...] = jnp.sqrt(jnp.maximum(1.0 - sim, 0.0))
+
+
+def _gather_jsd_kernel(q_ref, pts_ref, o_ref):
+    q = q_ref[...].astype(jnp.float32)            # (BQ, d)
+    pts = pts_ref[...].astype(jnp.float32)        # (BQ, BL, d)
+    hq = jnp.sum(_h(q), axis=-1)[:, None]
+    hp = jnp.sum(_h(pts), axis=-1)
+    hqp = jnp.sum(_h(q[:, None, :] + pts), axis=-1)
+    jsdiv = 1.0 - 0.5 * (hq + hp - hqp)
+    o_ref[...] = jnp.sqrt(jnp.maximum(jsdiv, 0.0))
+
+
+def _gather_triangular_kernel(q_ref, pts_ref, o_ref):
+    q = q_ref[...].astype(jnp.float32)
+    pts = pts_ref[...].astype(jnp.float32)
+    diff2 = (q[:, None, :] - pts) ** 2
+    den = q[:, None, :] + pts
+    terms = jnp.where(den > _EPS, diff2 / jnp.maximum(den, _EPS), 0.0)
+    o_ref[...] = jnp.sqrt(jnp.maximum(jnp.sum(terms, axis=-1), 0.0))
+
+
+_MXU_KERNELS = {
+    "euclidean": functools.partial(_gather_l2_kernel, squared=False),
+    "sqeuclidean": functools.partial(_gather_l2_kernel, squared=True),
+    "cosine_prenorm": _gather_cos_kernel,
+}
+
+_VPU_KERNELS = {
+    "jsd": _gather_jsd_kernel,
+    "triangular": _gather_triangular_kernel,
+}
+
+
+def _pad_axis(a: jnp.ndarray, axis: int, mult: int) -> jnp.ndarray:
+    p = (-a.shape[axis]) % mult
+    if not p:
+        return a
+    pads = [(0, 0)] * a.ndim
+    pads[axis] = (0, p)
+    return jnp.pad(a, pads)
+
+
+def gather_block_pallas(q: jnp.ndarray, pts: jnp.ndarray,
+                        pts_norm_sq: jnp.ndarray | None, kind: str, *,
+                        interpret: bool = True) -> jnp.ndarray:
+    """Lane-gathered block distances.  q (Q, d), pts (Q, L, d) -> (Q, L).
+
+    ``pts_norm_sq`` (Q, L): cached |p|^2 for the MXU family (gathered
+    from the tree's ``norm_sq``); computed on the fly when None.  For
+    ``cosine_prenorm`` the q rows must already be unit-normalised, and
+    pts_norm_sq must hold the UN-normalised squared norms.
+
+    ``interpret=True`` runs the kernel body in Python on CPU (validation
+    mode for this container); on TPU pass interpret=False.
+    """
+    bq, bl = _BLOCKS[kind]
+    nq, l_in = q.shape[0], pts.shape[1]
+    qp = _pad_axis(_pad_axis(q.astype(jnp.float32), 0, bq), 1, 128)
+    pp = _pad_axis(_pad_axis(
+        _pad_axis(pts.astype(jnp.float32), 0, bq), 1, bl), 2, 128)
+    m, d = qp.shape
+    l = pp.shape[1]
+    grid = (m // bq, l // bl)
+
+    if kind in _MXU_KERNELS:
+        if pts_norm_sq is None:
+            pts_norm_sq = jnp.sum(pts.astype(jnp.float32) ** 2, axis=-1)
+        np_ = _pad_axis(_pad_axis(
+            pts_norm_sq.astype(jnp.float32), 0, bq), 1, bl)
+        return pl.pallas_call(
+            _MXU_KERNELS[kind],
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((bq, d), lambda i, j: (i, 0)),
+                pl.BlockSpec((bq, bl, d), lambda i, j: (i, j, 0)),
+                pl.BlockSpec((bq, bl), lambda i, j: (i, j)),
+            ],
+            out_specs=pl.BlockSpec((bq, bl), lambda i, j: (i, j)),
+            out_shape=jax.ShapeDtypeStruct((m, l), jnp.float32),
+            interpret=interpret,
+        )(qp, pp, np_)[:nq, :l_in]
+
+    return pl.pallas_call(
+        _VPU_KERNELS[kind],
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bq, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bq, bl, d), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq, bl), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, l), jnp.float32),
+        interpret=interpret,
+    )(qp, pp)[:nq, :l_in]

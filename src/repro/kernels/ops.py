@@ -44,13 +44,18 @@ def _pairwise(q, x, *, kind: str, interpret: bool):
     return out[:mq, :nx]
 
 
+# metric name -> kernel kind; keys are the metrics the pairwise kernel
+# family supports (dispatch layers consult SUPPORTED, not a copy)
+_KIND_FOR = {"euclidean": "euclidean", "sqeuclidean": "sqeuclidean",
+             "cosine": "cosine_prenorm", "jsd": "jsd",
+             "triangular": "triangular"}
+SUPPORTED = frozenset(_KIND_FOR)
+
+
 def pairwise_distance(q, x, metric_name: str, *,
                       interpret: bool | None = None) -> jnp.ndarray:
-    """Kernel-backed pairwise distances.  metric_name in
-    {euclidean, sqeuclidean, cosine, jsd, triangular}."""
-    kind = {"euclidean": "euclidean", "sqeuclidean": "sqeuclidean",
-            "cosine": "cosine_prenorm", "jsd": "jsd",
-            "triangular": "triangular"}[metric_name]
+    """Kernel-backed pairwise distances.  metric_name in SUPPORTED."""
+    kind = _KIND_FOR[metric_name]
     itp = INTERPRET if interpret is None else interpret
     return _pairwise(jnp.asarray(q, jnp.float32), jnp.asarray(x, jnp.float32),
                      kind=kind, interpret=itp)

@@ -104,6 +104,9 @@ def run_cell(arch: str, shape: str, mesh, *, want_text: bool = False
 
     n_chips = int(np.prod(list(mesh.shape.values())))
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):
+        # older jaxlib returns [per-program dict]; newer returns the dict
+        cost = cost[0] if cost else {}
     try:
         mem = compiled.memory_analysis()
         mem_d = {

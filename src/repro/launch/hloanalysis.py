@@ -103,6 +103,24 @@ def _parse_computations(hlo: str) -> dict[str, Computation]:
     return comps
 
 
+def _split_top_level(inner: str) -> list[str]:
+    """Split an HLO operand list on commas at bracket depth 0 only —
+    inline shapes (`f32[128,16,64] %x`) contain commas themselves."""
+    parts, cur, depth = [], [], 0
+    for ch in inner:
+        if ch in "[{(":
+            depth += 1
+        elif ch in "]})":
+            depth -= 1
+        if ch == "," and depth == 0:
+            parts.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    parts.append("".join(cur))
+    return parts
+
+
 def _dot_flops_of_line(s: str, types: dict[str, str]) -> float:
     m = _OP_RE.match(s)
     if not m or m.group(3) != "dot":
@@ -112,7 +130,7 @@ def _dot_flops_of_line(s: str, types: dict[str, str]) -> float:
     # the computation's name -> type map
     inner = s[s.index("dot(") + 4:]
     inner = inner[:inner.index(")")]
-    lhs_arg = inner.split(",")[0].strip()
+    lhs_arg = _split_top_level(inner)[0].strip()
     lhs_m = _SHAPE_RE.search(lhs_arg)
     if lhs_m is not None:
         lhs_dims = _dims_of(lhs_m.group(0))

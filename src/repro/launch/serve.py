@@ -62,6 +62,11 @@ def main():
         t0 = time.time()
         st = search_binary_tree(tree, queries, t, metric_name="euclidean",
                                 mechanism=args.mechanism, r_cap=1024)
+        if np.asarray(st.stack_overflow).any():
+            raise RuntimeError(
+                "traversal stack overflow: raise stack_cap / lower frontier")
+        if np.asarray(st.overflow).any():
+            raise RuntimeError("result buffer overflow: raise r_cap")
         res_ix = st.result_sets()
         nd = float(np.mean(np.asarray(st.n_dist)))
         print(f"index search ({args.mechanism}): {time.time()-t0:.2f}s  "

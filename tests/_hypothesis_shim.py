@@ -1,0 +1,68 @@
+"""Drop-in fallback for `hypothesis` so property-test modules collect
+and run everywhere.
+
+When hypothesis is installed (CI — see requirements-dev.txt) this module
+re-exports the real `given` / `settings` / `strategies`.  When it is
+missing (minimal containers), a deterministic sampling shim runs each
+property with `max_examples` seeded draws — weaker than hypothesis (no
+shrinking, no adaptive search) but it keeps every property exercised
+instead of skipping the whole module.
+"""
+
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    import numpy as _np
+
+    class _Strategy:
+        def __init__(self, sampler):
+            self._sampler = sampler
+
+        def sample(self, rng):
+            return self._sampler(rng)
+
+    class _StrategiesShim:
+        @staticmethod
+        def integers(min_value, max_value):
+            # hypothesis bounds are inclusive
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def floats(min_value, max_value, **_):
+            return _Strategy(
+                lambda rng: float(rng.uniform(min_value, max_value)))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+    strategies = _StrategiesShim()
+
+    def settings(max_examples: int = 100, **_):
+        def deco(fn):
+            fn._shim_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*strats):
+        def deco(fn):
+            # Zero-arg wrapper WITHOUT functools.wraps: pytest must not
+            # follow __wrapped__ and mistake strategy args for fixtures.
+            def wrapper():
+                # @settings may sit above @given (stamps this wrapper) or
+                # below it (stamps fn) — both orders are valid hypothesis
+                n = getattr(wrapper, "_shim_max_examples",
+                            getattr(fn, "_shim_max_examples", 100))
+                for ex in range(n):
+                    rng = _np.random.default_rng(0xC0FFEE + 7919 * ex)
+                    fn(*[s.sample(rng) for s in strats])
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+        return deco

@@ -1,0 +1,7 @@
+"""Make sibling helper modules (_hypothesis_shim) importable regardless
+of pytest import mode / rootdir layout."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))

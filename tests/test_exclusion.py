@@ -4,7 +4,7 @@ and geometric identity of the Hilbert margin."""
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_shim import given, settings, strategies as st
 
 from repro.core import exclusion as E
 

@@ -1,0 +1,120 @@
+"""Frontier-batched traversal parity (DESIGN.md §3).
+
+Exclusion decisions are purely local geometry, so the visited-node set is
+independent of pop order and frontier width: for EVERY metric x mechanism
+x engine, a width-B frontier must return byte-identical result sets and
+per-query ``n_dist`` to the single-pop engine (B=1), with strictly fewer
+loop iterations and no stack overflow at the documented caps.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.tree import (build_disat, build_ght, build_mht,
+                             search_binary_tree, search_sat)
+
+CASES = [
+    ("euclidean", 0.32, False),
+    ("cosine", 0.18, False),
+    ("jsd", 0.09, True),
+    ("triangular", 0.12, True),
+]
+
+MECHS_FOR = {
+    "euclidean": ("hyperbolic", "hilbert"),
+    "cosine": ("hyperbolic", "hilbert"),
+    "jsd": ("hyperbolic", "hilbert"),
+    "triangular": ("hyperbolic", "hilbert"),
+}
+
+
+def _data(simplex, n=700, d=8, nq=16, seed=0):
+    rng = np.random.default_rng(seed)
+    raw = rng.random((n + nq, d)).astype(np.float32)
+    if simplex:
+        raw = raw / raw.sum(-1, keepdims=True)
+    return raw[:n], raw[n:]
+
+
+def _assert_parity(st1, stb, b):
+    assert not np.asarray(st1.stack_overflow).any(), "B=1 stack overflow"
+    assert not np.asarray(stb.stack_overflow).any(), f"B={b} stack overflow"
+    assert not np.asarray(st1.overflow).any()
+    assert not np.asarray(stb.overflow).any()
+    assert stb.result_sets() == st1.result_sets(), f"B={b} result sets"
+    np.testing.assert_array_equal(
+        np.asarray(stb.n_dist), np.asarray(st1.n_dist),
+        err_msg=f"B={b} n_dist")
+    assert int(stb.iters) < int(st1.iters)
+
+
+@pytest.mark.parametrize("metric,t,simplex", CASES)
+@pytest.mark.parametrize("kind", ["ght", "mht"])
+def test_binary_frontier_parity(metric, t, simplex, kind):
+    data, queries = _data(simplex)
+    build = {"ght": build_ght, "mht": build_mht}[kind]
+    tree = build(data, metric, leaf_size=16, seed=1)
+    for mech in MECHS_FOR[metric]:
+        st1 = search_binary_tree(tree, queries, t, metric_name=metric,
+                                 mechanism=mech, frontier=1)
+        st8 = search_binary_tree(tree, queries, t, metric_name=metric,
+                                 mechanism=mech, frontier=8)
+        _assert_parity(st1, st8, 8)
+
+
+@pytest.mark.parametrize("metric,t,simplex", CASES)
+def test_sat_frontier_parity(metric, t, simplex):
+    data, queries = _data(simplex, n=600)
+    tree = build_disat(data, metric, seed=2)
+    for mech in MECHS_FOR[metric]:
+        st1 = search_sat(tree, queries, t, metric_name=metric,
+                         mechanism=mech, frontier=1)
+        st8 = search_sat(tree, queries, t, metric_name=metric,
+                         mechanism=mech, frontier=8)
+        _assert_parity(st1, st8, 8)
+
+
+def test_frontier_width_sweep():
+    """B in {1, 4, 8, 16}: identical outcomes, monotone-ish iteration
+    drop, iters lower-bounded by pops/B."""
+    data, queries = _data(False, n=900)
+    tree = build_ght(data, "euclidean", leaf_size=16, seed=3)
+    base = search_binary_tree(tree, queries, 0.32,
+                              metric_name="euclidean", frontier=1)
+    prev_iters = int(base.iters)
+    for b in (4, 8, 16):
+        st = search_binary_tree(tree, queries, 0.32,
+                                metric_name="euclidean", frontier=b)
+        _assert_parity(base, st, b)
+        assert int(st.iters) <= prev_iters
+        prev_iters = int(st.iters)
+    assert int(st.iters) * 4 <= int(base.iters), \
+        "B=16 should cut trip count >= 4x on this workload"
+
+
+def test_frontier_rejects_bad_width():
+    data, queries = _data(False, n=100)
+    tree = build_ght(data, "euclidean", leaf_size=16, seed=1)
+    with pytest.raises(ValueError):
+        search_binary_tree(tree, queries, 0.3, metric_name="euclidean",
+                           frontier=0)
+    sat = build_disat(data, "euclidean", seed=1)
+    with pytest.raises(ValueError):
+        search_sat(sat, queries, 0.3, metric_name="euclidean", frontier=-1)
+
+
+def test_frontier_degenerate_data():
+    """Ball-fallback nodes (duplicates + collinear points) stay exact
+    under frontier batching."""
+    rng = np.random.default_rng(0)
+    data = np.concatenate([
+        np.zeros((30, 4)), np.ones((30, 4)),
+        np.linspace(0, 1, 60)[:, None] * np.ones((1, 4)),
+    ]).astype(np.float32)
+    queries = rng.random((6, 4)).astype(np.float32)
+    tree = build_mht(data, "euclidean", leaf_size=8, seed=3)
+    st1 = search_binary_tree(tree, queries, 0.6, metric_name="euclidean",
+                             r_cap=256, frontier=1)
+    st8 = search_binary_tree(tree, queries, 0.6, metric_name="euclidean",
+                             r_cap=256, frontier=8)
+    _assert_parity(st1, st8, 8)

@@ -4,7 +4,7 @@ property tests (interpret mode on CPU)."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_shim import given, settings, strategies as st
 
 from repro.kernels import ops, ref
 
@@ -78,6 +78,52 @@ def test_exclusion_margins_kernel():
     # weakness: hilbert margin >= hyperbolic wherever d1 >= d2
     mask = np.asarray(rh) >= 0
     assert (np.asarray(hil)[mask] >= np.asarray(hyp)[mask] - 1e-5).all()
+
+
+GATHER_SHAPES = [(1, 1, 3), (9, 37, 10), (8, 128, 16), (17, 260, 130)]
+
+
+@pytest.mark.parametrize("q,l,d", GATHER_SHAPES)
+@pytest.mark.parametrize("metric,simplex,tol", [
+    ("euclidean", False, 1e-5), ("sqeuclidean", False, 1e-5),
+    ("cosine", False, 1e-5), ("jsd", True, 1e-5),
+    ("triangular", True, 1e-5)])
+def test_gather_block_shapes(q, l, d, metric, simplex, tol):
+    """Gather-block kernels (frontier-traversal shape) vs the jnp path,
+    with and without the squared-norm cache."""
+    from repro.core.blockdist import block_distance
+    rng = np.random.default_rng(3)
+    qa = rng.random((q, d)).astype(np.float32) + 1e-4
+    pts = rng.random((q, l, d)).astype(np.float32) + 1e-4
+    if simplex:
+        qa = qa / qa.sum(-1, keepdims=True)
+        pts = pts / pts.sum(-1, keepdims=True)
+    ref = block_distance(metric, jnp.asarray(qa), jnp.asarray(pts),
+                         impl="jnp")
+    out = block_distance(metric, jnp.asarray(qa), jnp.asarray(pts),
+                         impl="pallas")
+    assert out.shape == (q, l)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=tol, rtol=tol)
+    nsq = jnp.sum(jnp.asarray(pts) ** 2, -1)
+    out_cached = block_distance(metric, jnp.asarray(qa), jnp.asarray(pts),
+                                pts_norm_sq=nsq, impl="pallas")
+    np.testing.assert_allclose(np.asarray(out_cached), np.asarray(ref),
+                               atol=tol, rtol=tol)
+
+
+def test_gather_block_norm_cache_jnp_path():
+    """The jnp path must honour the cache too (traversal passes gathered
+    tree norms): cached and on-the-fly results agree exactly."""
+    from repro.core.blockdist import block_distance
+    rng = np.random.default_rng(4)
+    qa = jnp.asarray(rng.random((5, 12)).astype(np.float32))
+    pts = jnp.asarray(rng.random((5, 20, 12)).astype(np.float32))
+    nsq = jnp.sum(pts * pts, -1)
+    for metric in ("euclidean", "cosine"):
+        a = block_distance(metric, qa, pts, impl="jnp")
+        b = block_distance(metric, qa, pts, pts_norm_sq=nsq, impl="jnp")
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
 def test_exclusion_kernel_degenerate_pairs():

@@ -1,0 +1,130 @@
+"""k-NN distance-evaluation cost: Hilbert vs Hyperbolic under the
+shrinking-radius engines (DESIGN.md §8).
+
+Sweeps k ∈ {1, 10, 100} × the four four-point paper metrics ×
+mechanism × frontier B ∈ {1, 8} on both engines (MHT binary / DiSAT).
+Every cell is cross-checked against ``bruteforce.knn`` (ids must be
+identical — the k-set is exact regardless of B), and per (engine,
+metric, k) the hilbert/hyperbolic ``n_dist`` ratio is the headline —
+the k-NN mirror of the paper's Table 4 range-query ratios.
+
+Unlike range search, k-NN ``n_dist`` is order-sensitive: B changes the
+granularity at which the radius shrinks, so cost varies with B (each
+row records it) while the returned k-set never does.
+
+  PYTHONPATH=src python -m benchmarks.knn_cost
+"""
+
+from __future__ import annotations
+
+import json
+import platform
+import time
+
+import jax
+import numpy as np
+
+from repro.core import bruteforce
+from repro.core.tree import (build_disat, build_mht, check_complete,
+                             knn_search_binary_tree, knn_search_sat)
+from benchmarks.common import make_space
+
+KS = (1, 10, 100)
+WIDTHS = (1, 8)
+METRICS = ("euclidean", "cosine", "jsd", "triangular")
+
+
+def _sweep(engine, search, tree, queries, metric, bf, *, repeat):
+    rows = []
+    for k in KS:
+        bf_d, bf_i = bf[k]
+        for mech in ("hyperbolic", "hilbert"):
+            for b in WIDTHS:
+                st = search(tree, queries, k, metric_name=metric,
+                            mechanism=mech, frontier=b)  # compile+run
+                jax.block_until_ready(st.ids)
+                t0 = time.perf_counter()
+                for _ in range(repeat):
+                    st = search(tree, queries, k, metric_name=metric,
+                                mechanism=mech, frontier=b)
+                    jax.block_until_ready(st.ids)
+                wall_us = (time.perf_counter() - t0) / repeat * 1e6
+                check_complete(st, context=f"{engine}/{metric} k={k} B={b}")
+                assert np.array_equal(np.asarray(st.ids), bf_i), \
+                    f"{engine}/{metric} k={k} {mech} B={b}: ids differ " \
+                    "from brute force"
+                np.testing.assert_allclose(
+                    np.asarray(st.dists), bf_d, atol=1e-5, rtol=1e-5)
+                rows.append({
+                    "engine": engine, "metric": metric, "k": k,
+                    "mechanism": mech, "frontier": b,
+                    "iters": int(st.iters),
+                    "n_dist_mean": float(np.mean(np.asarray(st.n_dist))),
+                    "wall_us": round(wall_us, 1),
+                    "exact": True,
+                })
+                r = rows[-1]
+                print(f"  {engine:5s} {metric:10s} k={k:3d} {mech:10s} "
+                      f"B={b}  n_dist={r['n_dist_mean']:7.0f}  "
+                      f"iters={r['iters']:5d}  {r['wall_us']:9.0f} us")
+    return rows
+
+
+def main(*, n=2000, nq=16, repeat=3, json_path="BENCH_knn.json") -> dict:
+    rows = []
+    print("engine  metric     k    mechanism  B  n_dist   iters  wall/call")
+    for metric in METRICS:
+        data, queries = make_space(metric, 8, n, nq)
+        bf = {}
+        for k in KS:
+            d, i = bruteforce.knn(np.asarray(data), np.asarray(queries),
+                                  metric_name=metric, k=k)
+            bf[k] = (np.asarray(d), np.asarray(i))
+        mht = build_mht(data, metric, leaf_size=16, seed=1)
+        rows += _sweep("mht", knn_search_binary_tree, mht, queries,
+                       metric, bf, repeat=repeat)
+        sat = build_disat(data, metric, seed=2)
+        rows += _sweep("disat", knn_search_sat, sat, queries, metric, bf,
+                       repeat=repeat)
+
+    # headline: hilbert/hyperbolic n_dist ratio per (engine, metric, k)
+    # at B=8 — must be <= 1 on every four-point cell (hilbert excludes a
+    # superset at every decision; the paper's claim carried to k-NN)
+    summary = {}
+    for r in rows:
+        if r["mechanism"] != "hilbert" or r["frontier"] != 8:
+            continue
+        hyp = next(x for x in rows if x["engine"] == r["engine"]
+                   and x["metric"] == r["metric"] and x["k"] == r["k"]
+                   and x["mechanism"] == "hyperbolic"
+                   and x["frontier"] == 8)
+        cell = f"{r['engine']}/{r['metric']}/k={r['k']}"
+        ratio = r["n_dist_mean"] / max(hyp["n_dist_mean"], 1e-9)
+        summary[cell] = {
+            "hilbert_n_dist": r["n_dist_mean"],
+            "hyperbolic_n_dist": hyp["n_dist_mean"],
+            "ratio": round(ratio, 4),
+        }
+        assert ratio <= 1.0 + 1e-9, \
+            f"{cell}: hilbert n_dist EXCEEDS hyperbolic ({ratio:.4f})"
+        print(f"{cell}: hilbert/hyperbolic n_dist = {ratio:.3f}")
+
+    result = {
+        "bench": "knn_cost",
+        "n": n, "nq": nq, "dim": 8, "repeat": repeat,
+        "ks": list(KS), "widths": list(WIDTHS),
+        "device": jax.devices()[0].platform,
+        "python": platform.python_version(),
+        "jax": jax.__version__,
+        "rows": rows,
+        "summary": summary,
+    }
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(result, f, indent=1)
+        print(f"wrote {json_path}")
+    return result
+
+
+if __name__ == "__main__":
+    main()

@@ -7,8 +7,9 @@ system-performance benches (frontier traversal).
 
 Output: per-table CSV blocks (name, values, derived ratios), then a
 summary `name,us_per_call,derived` line per table for harness parsing.
-The ``traversal`` bench additionally writes the machine-readable
-``BENCH_traversal.json`` (perf trajectory artifact).
+The ``traversal`` / ``knn`` benches additionally write the
+machine-readable ``BENCH_traversal.json`` / ``BENCH_knn.json`` (perf
+trajectory artifacts).
 """
 
 from __future__ import annotations
@@ -17,7 +18,7 @@ import sys
 import time
 
 from benchmarks import (disat_realworld, exclusion_power, ght_mht_cost,
-                        idim_thresholds, traversal_throughput)
+                        idim_thresholds, knn_cost, traversal_throughput)
 
 TABLES = {
     "table2": idim_thresholds.main,
@@ -25,6 +26,7 @@ TABLES = {
     "table4": ght_mht_cost.main,
     "fig13": disat_realworld.main,
     "traversal": traversal_throughput.main,
+    "knn": knn_cost.main,
 }
 
 

@@ -10,6 +10,7 @@ import numpy as np
 
 from repro.core import bruteforce, embeddings, metrics
 from repro.core.tree import (build_disat, build_ght, build_mht,
+                             knn_search_binary_tree, knn_search_sat,
                              search_binary_tree, search_sat)
 
 rng = np.random.default_rng(0)
@@ -55,5 +56,19 @@ for name, t in (("jsd", 0.08), ("triangular", 0.1)):
         assert st.result_sets() == truth
         print(f"{name:10s} {mech:10s} "
               f"n_dist={float(np.asarray(st.n_dist).mean()):7.0f}")
+
+print("\n=== 4. exact k-NN (shrinking-radius Hilbert exclusion) ===")
+k = 10
+bf_d, bf_i = bruteforce.knn(data, queries, metric_name="euclidean", k=k)
+for label, tree, knn in [
+        ("MHT", build_mht(data, "euclidean", seed=1),
+         knn_search_binary_tree),
+        ("DiSAT", build_disat(data, "euclidean", seed=1), knn_search_sat)]:
+    row = [f"{label:6s}"]
+    for mech in ("hyperbolic", "hilbert"):
+        st = knn(tree, queries, k, metric_name="euclidean", mechanism=mech)
+        assert np.array_equal(np.asarray(st.ids), np.asarray(bf_i))
+        row.append(f"{mech}={float(np.asarray(st.n_dist).mean()):7.0f}")
+    print("  ".join(row) + f"   (k={k}, ids == brute force)")
 
 print("\nall exact; Hilbert always cheaper.")

@@ -98,7 +98,18 @@ def range_counts(data, queries, t, *, metric_name: str,
 def knn(data: Array, queries: Array, *, metric_name: str,
         k: int) -> tuple[Array, Array]:
     """Exact k-NN: (distances (Q,k), ids (Q,k)). Single pairwise block —
-    used by the retrieval serving path where n fits (10^6 x d)."""
+    used by the retrieval serving path where n fits (10^6 x d).
+
+    Ties are broken toward lower ids (``lax.top_k``'s rule) — the same
+    (distance, id) order the tree k-NN engines and ``forest_knn`` use.
+    When k > n the trailing slots hold (+inf, -1), matching the tree
+    engines' padding.
+    """
     d = pairwise_distance(metric_name, queries, data)
-    neg, idx = jax.lax.top_k(-d, k)
+    kk = min(k, d.shape[1])
+    neg, idx = jax.lax.top_k(-d, kk)
+    if kk < k:
+        pad = ((0, 0), (0, k - kk))
+        neg = jnp.pad(neg, pad, constant_values=-jnp.inf)
+        idx = jnp.pad(idx, pad, constant_values=-1)
     return -neg, idx

@@ -27,16 +27,22 @@ from jax.experimental.shard_map import shard_map
 
 from repro.core.tree.build import build_ght, build_mht
 from repro.core.tree.flat import BinaryHyperplaneTree
-from repro.core.tree.search import _search_binary
+from repro.core.tree.search import _ID_SENT, _knn_binary, _search_binary
 
 
 @dataclasses.dataclass
 class ShardedForest:
-    """Per-shard trees stacked on a leading shard axis, device-sharded."""
+    """Per-shard trees stacked on a leading shard axis, device-sharded.
+
+    ``id_offset``: (n_shards, 1) global id offset per shard; -1 marks a
+    FALLBACK shard (the data didn't divide evenly and this shard holds a
+    duplicate of point 0 purely to keep shapes uniform) whose results
+    and distance counts must be masked out of every reduction.
+    """
     trees: BinaryHyperplaneTree      # every leaf has leading dim = n_shards
     mesh: Mesh
     axis: str
-    id_offset: Any                   # (n_shards,) global id offset per shard
+    id_offset: Any                   # (n_shards, 1) offset, -1 = fallback
     n_total: int
 
 
@@ -78,8 +84,13 @@ def build_forest(data: np.ndarray, metric_name: str, mesh: Mesh,
         lo, hi = s * per, min((s + 1) * per, n)
         shard_pts = data[lo:hi]
         if shard_pts.shape[0] == 0:
+            # n doesn't divide: build a shape-compatible dummy tree over a
+            # duplicate of point 0 and mark the shard with offset -1 so
+            # _run masks its (duplicate) results and distance counts out
+            # — otherwise global id 0 is returned by two shards and
+            # res_cnt / n_dist are double-counted.
             shard_pts = data[:1]
-            lo = 0
+            lo = -1
         trees.append(builder(shard_pts, metric_name,
                              leaf_size=leaf_size, seed=seed + s))
         offsets.append(lo)
@@ -107,13 +118,34 @@ def build_forest(data: np.ndarray, metric_name: str, mesh: Mesh,
                          n_total=n)
 
 
+def _refuse_overflows(ctx: str, n_sovf, n_iovf, *, n_rovf=0, stack_cap,
+                      frontier, r_cap=None, max_iter=None) -> None:
+    """The forest twin of ``search.check_complete``: refuse silently
+    truncated results, from psum'd per-(query, shard) overflow counts."""
+    if int(n_sovf):
+        raise RuntimeError(
+            f"{ctx}: traversal stack overflow on {int(n_sovf)} "
+            f"(query, shard) lanes — raise stack_cap (={stack_cap}) or "
+            f"lower frontier (={frontier})")
+    if int(n_rovf):
+        raise RuntimeError(
+            f"{ctx}: result buffer overflow on {int(n_rovf)} "
+            f"(query, shard) lanes — raise r_cap (={r_cap})")
+    if int(n_iovf):
+        raise RuntimeError(
+            f"{ctx}: iteration budget exhausted on {int(n_iovf)} "
+            f"(query, shard) lanes — results would be silently "
+            f"truncated; raise max_iter (={max_iter})")
+
+
 def forest_search(forest: ShardedForest, queries, t, *, metric_name: str,
                   mechanism: str = "hilbert", r_cap: int = 64,
-                  stack_cap: int = 256, frontier: int = 8):
+                  stack_cap: int = 256, frontier: int = 8,
+                  max_iter: int | None = None):
     """Replicated-query forest search.
 
     Returns (res_ids (Q, n_shards*r_cap) global ids, res_cnt (Q,),
-    n_dist (Q,) summed over shards).
+    n_dist (Q,) summed over non-fallback shards).
     """
     mesh, axis = forest.mesh, forest.axis
     leaf_cap = int(np.max(np.asarray(forest.trees.leaf_count)))
@@ -124,7 +156,7 @@ def forest_search(forest: ShardedForest, queries, t, *, metric_name: str,
 
     @partial(shard_map, mesh=mesh,
              in_specs=(tree_specs, P(axis), P(), P()),
-             out_specs=(P(None, axis), P(), P(), P(), P()),
+             out_specs=(P(None, axis), P(), P(), P(), P(), P()),
              check_rep=False)
     def _run(tree, id_off, q, tt):
         # leading shard axis has local length 1 inside the map
@@ -132,28 +164,85 @@ def forest_search(forest: ShardedForest, queries, t, *, metric_name: str,
         stats = _search_binary(
             tree, q, tt, metric_name=metric_name, mechanism=mechanism,
             r_cap=r_cap, stack_cap=stack_cap, leaf_cap=max(leaf_cap, 1),
-            frontier=frontier, use_cover_radius=True)
-        valid = stats.res_ids >= 0
-        gids = jnp.where(valid, stats.res_ids + id_off[0, 0], -1)
-        cnt = jax.lax.psum(stats.res_cnt, axis)
-        nd = jax.lax.psum(stats.n_dist, axis)
+            frontier=frontier, use_cover_radius=True, max_iter=max_iter)
+        # fallback shards (offset -1) hold a duplicate of point 0: their
+        # results AND distance counts are masked out of every reduction
+        fb = id_off[0, 0] < 0
+        valid = (stats.res_ids >= 0) & ~fb
+        gids = jnp.where(valid,
+                         stats.res_ids + jnp.maximum(id_off[0, 0], 0), -1)
+        zero = jnp.zeros_like(stats.res_cnt)
+        cnt = jax.lax.psum(jnp.where(fb, zero, stats.res_cnt), axis)
+        nd = jax.lax.psum(jnp.where(fb, zero, stats.n_dist), axis)
         n_sovf = jax.lax.psum(
             jnp.sum(stats.stack_overflow.astype(jnp.int32)), axis)
         n_rovf = jax.lax.psum(
             jnp.sum(stats.overflow.astype(jnp.int32)), axis)
-        return gids, cnt, nd, n_sovf, n_rovf
+        n_iovf = jax.lax.psum(
+            jnp.sum(stats.iter_overflow.astype(jnp.int32)), axis)
+        return gids, cnt, nd, n_sovf, n_rovf, n_iovf
 
-    gids, cnt, nd, n_sovf, n_rovf = _run(forest.trees, forest.id_offset,
-                                         queries, tq)
-    # exactness contract: a dropped stack entry or result slot means the
-    # returned sets are silently truncated — refuse to return them
-    if int(n_sovf):
-        raise RuntimeError(
-            f"forest_search: traversal stack overflow on {int(n_sovf)} "
-            f"(query, shard) lanes — raise stack_cap (={stack_cap}) or "
-            f"lower frontier (={frontier})")
-    if int(n_rovf):
-        raise RuntimeError(
-            f"forest_search: result buffer overflow on {int(n_rovf)} "
-            f"(query, shard) lanes — raise r_cap (={r_cap})")
+    gids, cnt, nd, n_sovf, n_rovf, n_iovf = _run(
+        forest.trees, forest.id_offset, queries, tq)
+    # exactness contract: a dropped stack entry, result slot or iteration
+    # budget means the returned sets are silently truncated — refuse
+    _refuse_overflows("forest_search", n_sovf, n_iovf, n_rovf=n_rovf,
+                      stack_cap=stack_cap, frontier=frontier, r_cap=r_cap,
+                      max_iter=max_iter)
     return gids, cnt, nd
+
+
+def forest_knn(forest: ShardedForest, queries, k: int, *, metric_name: str,
+               mechanism: str = "hilbert", stack_cap: int = 256,
+               frontier: int = 8, max_iter: int | None = None):
+    """Exact distributed k-NN: per-shard local k-NN under ``shard_map``
+    (each shard runs the shrinking-radius engine against its own local
+    k-th best), all-gather of the (Q, n_shards*k) candidates, then a
+    global (distance, id) top-k merge.
+
+    Any global k-NN member is necessarily in its own shard's local top-k,
+    so the merge of local top-ks is exact; ties resolve to the smallest
+    global id, identical to ``bruteforce.knn``.  Returns (dists (Q, k),
+    ids (Q, k) global ids with -1 padding when k > n, n_dist (Q,) summed
+    over non-fallback shards).
+    """
+    if k < 1:
+        raise ValueError(f"k must be >= 1, got {k}")
+    mesh, axis = forest.mesh, forest.axis
+    leaf_cap = int(np.max(np.asarray(forest.trees.leaf_count)))
+    queries = jnp.asarray(queries, jnp.float32)
+
+    tree_specs = jax.tree_util.tree_map(lambda _: P(axis), forest.trees)
+
+    @partial(shard_map, mesh=mesh,
+             in_specs=(tree_specs, P(axis), P()),
+             out_specs=(P(None, axis), P(None, axis), P(), P(), P()),
+             check_rep=False)
+    def _run(tree, id_off, q):
+        tree = jax.tree_util.tree_map(lambda x: x[0], tree)
+        st = _knn_binary(
+            tree, q, metric_name=metric_name, mechanism=mechanism, k=k,
+            stack_cap=stack_cap, leaf_cap=max(leaf_cap, 1),
+            frontier=frontier, use_cover_radius=True, max_iter=max_iter)
+        fb = id_off[0, 0] < 0
+        ok = (st.ids >= 0) & ~fb
+        gids = jnp.where(ok, st.ids + jnp.maximum(id_off[0, 0], 0),
+                         _ID_SENT)
+        gd = jnp.where(ok, st.dists, jnp.inf)
+        nd = jax.lax.psum(
+            jnp.where(fb, jnp.zeros_like(st.n_dist), st.n_dist), axis)
+        n_sovf = jax.lax.psum(
+            jnp.sum(st.stack_overflow.astype(jnp.int32)), axis)
+        n_iovf = jax.lax.psum(
+            jnp.sum(st.iter_overflow.astype(jnp.int32)), axis)
+        return gd, gids, nd, n_sovf, n_iovf
+
+    gd, gids, nd, n_sovf, n_iovf = _run(forest.trees, forest.id_offset,
+                                        queries)
+    _refuse_overflows("forest_knn", n_sovf, n_iovf, stack_cap=stack_cap,
+                      frontier=frontier, max_iter=max_iter)
+    # global top-k merge of the gathered per-shard candidates
+    gd, gids = jax.lax.sort((gd, gids), num_keys=2)
+    gd, gids = gd[:, :k], gids[:, :k]
+    gids = jnp.where(gids == _ID_SENT, -1, gids)
+    return gd, gids, nd

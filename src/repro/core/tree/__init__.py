@@ -1,10 +1,13 @@
 from repro.core.tree.flat import BinaryHyperplaneTree, SATree
 from repro.core.tree.build import build_ght, build_mht, build_disat
 from repro.core.tree.search import (
-    search_binary_tree, search_sat, SearchStats)
+    search_binary_tree, search_sat, knn_search_binary_tree, knn_search_sat,
+    SearchStats, KnnStats, check_complete)
 
 __all__ = [
     "BinaryHyperplaneTree", "SATree",
     "build_ght", "build_mht", "build_disat",
-    "search_binary_tree", "search_sat", "SearchStats",
+    "search_binary_tree", "search_sat",
+    "knn_search_binary_tree", "knn_search_sat",
+    "SearchStats", "KnnStats", "check_complete",
 ]

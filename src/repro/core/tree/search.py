@@ -19,6 +19,17 @@ per-iteration engine; the parity tests assert B>1 reproduces it exactly.
 Exact range search: for the same (tree, queries, t) every mechanism must
 return the identical result set (paper §6.5); tests assert this.
 
+Exact k-NN search (DESIGN.md §8): the same frontier machinery run
+best-first with a *shrinking* radius t = current k-th best distance per
+lane (Connor et al., "Supermetric Search", arXiv 1707.08361 generalise
+the four-point bounds beyond fixed-radius queries).  Each lane keeps a
+sorted (k,) best-distance/best-id buffer in the while-loop carry; every
+stack entry carries the lower-bound margin it survived at push time so a
+popped node is RE-TESTED against the now-smaller radius before its tile
+is evaluated.  Unlike range search, per-query ``n_dist`` is legitimately
+order-sensitive for k-NN (frontier width B changes cost) but the
+returned k-set — ties broken by (distance, id) — never changes.
+
 Static jit arguments: metric name, mechanism, buffer sizes, frontier
 width.  The tree is a dynamic pytree operand, so one compilation serves
 every tree of the same shape.
@@ -56,6 +67,9 @@ class SearchStats:
     overflow: (Q,) result buffer overflow
     stack_overflow: (Q,) traversal stack overflow (correctness violated if
               set — sized so tests prove it never fires)
+    iter_overflow: (Q,) the while_loop hit max_iter with this lane's stack
+              non-empty: the result set is silently TRUNCATED (correctness
+              violated if set; callers must refuse to use the results)
     iters:    () loop iterations executed (each evaluates one frontier)
     """
     res_ids: Any
@@ -63,11 +77,12 @@ class SearchStats:
     n_dist: Any
     overflow: Any
     stack_overflow: Any
+    iter_overflow: Any
     iters: Any
 
     def tree_flatten(self):
         return ((self.res_ids, self.res_cnt, self.n_dist, self.overflow,
-                 self.stack_overflow, self.iters), None)
+                 self.stack_overflow, self.iter_overflow, self.iters), None)
 
     @classmethod
     def tree_unflatten(cls, _, leaves):
@@ -79,6 +94,56 @@ class SearchStats:
         cnt = np.asarray(self.res_cnt)
         return [set(ids[i, :min(int(cnt[i]), ids.shape[1])].tolist())
                 for i in range(ids.shape[0])]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class KnnStats:
+    """Per-query k-NN search outcome.
+
+    ids:   (Q, k) original data ids, ascending (distance, id); -1 pads
+           slots beyond n when k > n
+    dists: (Q, k) matching distances (+inf in padded slots)
+    n_dist: (Q,) query-to-object distance evaluations (order-sensitive
+           for k-NN: frontier width changes cost, never the k-set)
+    stack_overflow: (Q,) traversal stack overflow (correctness violated)
+    iter_overflow:  (Q,) loop ended at max_iter with a non-empty stack
+           (results silently truncated; callers must refuse them)
+    iters: () loop iterations executed
+    """
+    ids: Any
+    dists: Any
+    n_dist: Any
+    stack_overflow: Any
+    iter_overflow: Any
+    iters: Any
+
+    def tree_flatten(self):
+        return ((self.ids, self.dists, self.n_dist, self.stack_overflow,
+                 self.iter_overflow, self.iters), None)
+
+    @classmethod
+    def tree_unflatten(cls, _, leaves):
+        return cls(*leaves)
+
+
+def check_complete(stats, *, context: str = "search") -> None:
+    """Refuse silently wrong result sets: raise if any lane overflowed its
+    stack, its result buffer, or the iteration budget.  Mirrors the
+    forest_search refusal for single-tree callers (serve/benchmarks)."""
+    if np.asarray(stats.stack_overflow).any():
+        raise RuntimeError(
+            f"{context}: traversal stack overflow — raise stack_cap or "
+            "lower frontier")
+    if getattr(stats, "overflow", None) is not None and \
+            np.asarray(stats.overflow).any():
+        raise RuntimeError(f"{context}: result buffer overflow — raise "
+                           "r_cap")
+    if np.asarray(stats.iter_overflow).any():
+        raise RuntimeError(
+            f"{context}: iteration budget exhausted with non-empty "
+            "stacks — results would be silently truncated; raise "
+            "max_iter")
 
 
 def _margin(mechanism: str, d1: Array, d2: Array, d12: Array) -> Array:
@@ -106,34 +171,39 @@ def _append_results(res_ids, res_cnt, overflow, lane, ids, hits, r_cap):
     return res_ids, res_cnt, overflow
 
 
-def _pop_frontier(stack_n, stack_d, sp, b_cap: int, stack_cap: int):
+def _pop_frontier(stack_n, payloads, sp, b_cap: int, stack_cap: int):
     """Pop up to ``b_cap`` nodes per lane off the stack tops.
 
-    Returns (node (Q, B), carried (Q, B), fvalid (Q, B), new sp).  Slot
-    j holds the j-th-from-top entry; invalid slots are clamped to node 0
-    and must be masked via fvalid.
+    ``payloads`` is a tuple of (Q, S) per-entry side arrays (carried
+    distance, push-time margin, ...) popped in lockstep with the node
+    stack.  Returns (node (Q, B), popped payload tuple, fvalid (Q, B),
+    new sp).  Slot j holds the j-th-from-top entry; invalid slots are
+    clamped to node 0 and must be masked via fvalid.
     """
     j = jnp.arange(b_cap, dtype=_I32)[None, :]
     npop = jnp.minimum(sp, b_cap)
     fvalid = j < npop[:, None]
     pos = jnp.clip(sp[:, None] - 1 - j, 0, max(stack_cap - 1, 0))
     node = jnp.take_along_axis(stack_n, pos, 1)
-    carried = jnp.take_along_axis(stack_d, pos, 1)
+    popped = tuple(jnp.take_along_axis(p, pos, 1) for p in payloads)
     node = jnp.where(fvalid, node, 0)
-    return node, carried, fvalid, sp - npop
+    return node, popped, fvalid, sp - npop
 
 
-def _multi_push(stack_n, stack_d, sp, stack_ovf, lane, nodes, dists, mask,
-                stack_cap: int):
+def _multi_push(stack_n, payloads, sp, stack_ovf, lane, nodes, values,
+                mask, stack_cap: int):
     """Push masked (Q, W) candidates; candidate order = push order, so
-    later columns end nearer the stack top."""
+    later columns end nearer the stack top.  ``payloads``/``values`` are
+    matching tuples of side stacks / per-candidate side values."""
     pos = sp[:, None] + jnp.cumsum(mask.astype(_I32), axis=1) - 1
     wpos = jnp.where(mask, pos, stack_cap)        # stack_cap col == dropped
     stack_n = stack_n.at[lane[:, None], wpos].set(nodes, mode="drop")
-    stack_d = stack_d.at[lane[:, None], wpos].set(dists, mode="drop")
+    payloads = tuple(
+        p.at[lane[:, None], wpos].set(v, mode="drop")
+        for p, v in zip(payloads, values))
     sp = sp + jnp.sum(mask, axis=1).astype(_I32)
     stack_ovf = stack_ovf | (sp > stack_cap)
-    return stack_n, stack_d, sp, stack_ovf
+    return stack_n, payloads, sp, stack_ovf
 
 
 # ---------------------------------------------------------------------------
@@ -143,11 +213,12 @@ def _multi_push(stack_n, stack_d, sp, stack_ovf, lane, nodes, dists, mask,
 @functools.partial(
     jax.jit, static_argnames=("metric_name", "mechanism", "r_cap",
                               "stack_cap", "leaf_cap", "frontier",
-                              "use_cover_radius"))
+                              "use_cover_radius", "max_iter"))
 def _search_binary(tree: BinaryHyperplaneTree, queries: Array, t: Array,
                    *, metric_name: str, mechanism: str, r_cap: int,
                    stack_cap: int, leaf_cap: int, frontier: int = 1,
-                   use_cover_radius: bool) -> SearchStats:
+                   use_cover_radius: bool,
+                   max_iter: int | None = None) -> SearchStats:
     nq = queries.shape[0]
     n = tree.data.shape[0]
     b_cap = frontier
@@ -162,7 +233,8 @@ def _search_binary(tree: BinaryHyperplaneTree, queries: Array, t: Array,
     n_dist = jnp.zeros((nq,), _I32)
     overflow = jnp.zeros((nq,), bool)
     stack_ovf = jnp.zeros((nq,), bool)
-    max_iter = tree.p1.shape[0] + 8                      # ≤ nodes visited
+    if max_iter is None:
+        max_iter = tree.p1.shape[0] + 8                  # ≤ nodes visited
 
     def cond(st):
         (_, _, sp, _, _, _, _, _, it) = st
@@ -171,8 +243,8 @@ def _search_binary(tree: BinaryHyperplaneTree, queries: Array, t: Array,
     def body(st):
         (stack_n, stack_d, sp, res_ids, res_cnt, n_dist, overflow,
          stack_ovf, it) = st
-        node, carried, fvalid, sp = _pop_frontier(
-            stack_n, stack_d, sp, b_cap, stack_cap)     # all (Q, B)
+        node, (carried,), fvalid, sp = _pop_frontier(
+            stack_n, (stack_d,), sp, b_cap, stack_cap)  # all (Q, B)
 
         left = tree.left[node]
         right = tree.right[node]
@@ -244,9 +316,9 @@ def _search_binary(tree: BinaryHyperplaneTree, queries: Array, t: Array,
         cand_n = jnp.flip(jnp.stack([right, left], 2), 1).reshape(nq, -1)
         cand_d = jnp.flip(jnp.stack([d2, d1], 2), 1).reshape(nq, -1)
         cand_m = jnp.flip(jnp.stack([push_r, push_l], 2), 1).reshape(nq, -1)
-        stack_n, stack_d, sp, stack_ovf = _multi_push(
-            stack_n, stack_d, sp, stack_ovf, lane, cand_n, cand_d, cand_m,
-            stack_cap)
+        stack_n, (stack_d,), sp, stack_ovf = _multi_push(
+            stack_n, (stack_d,), sp, stack_ovf, lane, cand_n, (cand_d,),
+            cand_m, stack_cap)
 
         return (stack_n, stack_d, sp, res_ids, res_cnt, n_dist, overflow,
                 stack_ovf, it + 1)
@@ -256,14 +328,14 @@ def _search_binary(tree: BinaryHyperplaneTree, queries: Array, t: Array,
     (stack_n, stack_d, sp, res_ids, res_cnt, n_dist, overflow, stack_ovf,
      it) = jax.lax.while_loop(cond, body, init)
     return SearchStats(res_ids[:, :r_cap], res_cnt, n_dist, overflow,
-                       stack_ovf, it)
+                       stack_ovf, sp > 0, it)
 
 
 def search_binary_tree(tree: BinaryHyperplaneTree, queries, t, *,
                        metric_name: str, mechanism: str = "hilbert",
                        r_cap: int = 128, stack_cap: int = 256,
-                       frontier: int = 8,
-                       use_cover_radius: bool = True) -> SearchStats:
+                       frontier: int = 8, use_cover_radius: bool = True,
+                       max_iter: int | None = None) -> SearchStats:
     """Range search on a GHT/MHT.  mechanism in {'hyperbolic','hilbert'}.
 
     ``frontier``: nodes popped per lane per iteration (static).  Any
@@ -271,7 +343,10 @@ def search_binary_tree(tree: BinaryHyperplaneTree, queries, t, *,
     ``n_dist``; larger B cuts loop trip count ~B× and widens each
     distance tile by the same factor (DESIGN.md §3).  ``stack_cap``
     (default 256) must absorb the extra in-flight breadth; the
-    ``stack_overflow`` flag reports violations.
+    ``stack_overflow`` flag reports violations.  ``max_iter`` (default
+    n_nodes + 8, which provably suffices) bounds the while_loop; ending
+    with non-empty stacks sets ``iter_overflow`` — truncated results
+    that callers must refuse (``check_complete``).
     """
     _check_mechanism(metric_name, mechanism)
     if frontier < 1:
@@ -283,7 +358,186 @@ def search_binary_tree(tree: BinaryHyperplaneTree, queries, t, *,
         tree, jnp.asarray(queries, jnp.float32), t,
         metric_name=metric_name, mechanism=mechanism, r_cap=r_cap,
         stack_cap=stack_cap, leaf_cap=max(leaf_cap, 1), frontier=frontier,
-        use_cover_radius=use_cover_radius)
+        use_cover_radius=use_cover_radius, max_iter=max_iter)
+
+
+_ID_SENT = np.int32(np.iinfo(np.int32).max)   # sorts after every real id
+
+
+def _merge_best(best_d, best_i, cand_d, cand_i, cand_ok, k: int):
+    """Merge masked candidates into the sorted (Q, k) best buffer.
+
+    Ordering key is (distance, id) — ties at the k-boundary resolve to
+    the smallest ids, matching ``lax.top_k``'s lower-index tie rule in
+    ``bruteforce.knn``, and making the k-set independent of traversal
+    order / frontier width.
+    """
+    cand_d = jnp.where(cand_ok, cand_d, jnp.inf)
+    cand_i = jnp.where(cand_ok, cand_i, _ID_SENT)
+    md = jnp.concatenate([best_d, cand_d], axis=1)
+    mi = jnp.concatenate([best_i, cand_i], axis=1)
+    md, mi = jax.lax.sort((md, mi), num_keys=2)
+    return md[:, :k], mi[:, :k]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("metric_name", "mechanism", "k", "stack_cap",
+                              "leaf_cap", "frontier", "use_cover_radius",
+                              "max_iter"))
+def _knn_binary(tree: BinaryHyperplaneTree, queries: Array, *,
+                metric_name: str, mechanism: str, k: int, stack_cap: int,
+                leaf_cap: int, frontier: int = 1, use_cover_radius: bool,
+                max_iter: int | None = None) -> KnnStats:
+    nq = queries.shape[0]
+    n = tree.data.shape[0]
+    b_cap = frontier
+    lane = jnp.arange(nq, dtype=_I32)
+
+    stack_n = jnp.zeros((nq, stack_cap), _I32)          # root = node 0
+    stack_d = jnp.zeros((nq, stack_cap), jnp.float32)
+    stack_m = jnp.full((nq, stack_cap), -jnp.inf, jnp.float32)
+    sp = jnp.ones((nq,), _I32)
+    best_d = jnp.full((nq, k), jnp.inf, jnp.float32)
+    best_i = jnp.full((nq, k), _ID_SENT, _I32)
+    n_dist = jnp.zeros((nq,), _I32)
+    stack_ovf = jnp.zeros((nq,), bool)
+    if max_iter is None:
+        max_iter = tree.p1.shape[0] + 8                  # ≤ nodes visited
+
+    def cond(st):
+        (_, _, _, sp, _, _, _, _, it) = st
+        return jnp.any(sp > 0) & (it < max_iter)
+
+    def body(st):
+        (stack_n, stack_d, stack_m, sp, best_d, best_i, n_dist,
+         stack_ovf, it) = st
+        node, (carried, pmargin), fvalid, sp = _pop_frontier(
+            stack_n, (stack_d, stack_m), sp, b_cap, stack_cap)
+
+        # best-first re-test: the radius may have shrunk below the lower
+        # bound this entry survived at push time — drop it before paying
+        # for its tile (most of the win over naive traversal)
+        t_pop = best_d[:, -1]
+        fvalid = fvalid & ~(pmargin > t_pop[:, None])
+        node = jnp.where(fvalid, node, 0)
+
+        left = tree.left[node]
+        right = tree.right[node]
+        is_int = (left >= 0) & fvalid
+        is_leaf = (left < 0) & fvalid
+
+        # ---- frontier gather: pivots + leaf buckets as ONE dense tile --
+        p1 = tree.p1[node]                               # (Q, B)
+        p2 = tree.p2[node]
+        d12 = tree.d12[node]
+        inh = tree.p1_inherited[node] == 1
+        same_pivot = p1 == p2                            # ball-fallback node
+        start = tree.leaf_start[node]
+        cnt = tree.leaf_count[node]
+        lcols = jnp.arange(leaf_cap, dtype=_I32)[None, None, :]
+        lmask = is_leaf[:, :, None] & (lcols < cnt[:, :, None])  # (Q, B, L)
+        bslot = jnp.clip(start[:, :, None] + lcols, 0,
+                         jnp.maximum(tree.perm.shape[0] - 1, 0))
+        bidx = tree.perm[bslot] if tree.perm.shape[0] else \
+            jnp.zeros((nq, b_cap, leaf_cap), _I32)
+
+        tile_idx = jnp.concatenate(
+            [jnp.clip(p1, 0, n - 1), jnp.clip(p2, 0, n - 1),
+             bidx.reshape(nq, b_cap * leaf_cap)], axis=1)
+        dtile = block_distance(
+            metric_name, queries, tree.data[tile_idx],
+            pts_norm_sq=tree.norm_sq[tile_idx])          # (Q, B(2+L))
+        d1f = dtile[:, :b_cap]
+        d2c = dtile[:, b_cap:2 * b_cap]
+        dl = dtile[:, 2 * b_cap:].reshape(nq, b_cap, leaf_cap)
+
+        d1 = jnp.where(inh, carried, d1f)
+        d2 = jnp.where(same_pivot, d1, d2c)
+        # fresh distances: p1 unless inherited, p2 unless it IS p1
+        n_dist = n_dist + jnp.sum(jnp.where(
+            is_int,
+            (1 - inh.astype(_I32)) + (1 - same_pivot.astype(_I32)),
+            0), axis=1)
+        n_dist = n_dist + jnp.sum(lmask, axis=(1, 2)).astype(_I32)
+
+        # ---- candidates -> best buffer; THEN the shrunk radius --------
+        fresh1 = is_int & ~inh
+        fresh2 = is_int & ~same_pivot
+        cand_i = jnp.concatenate(
+            [p1, p2, bidx.reshape(nq, b_cap * leaf_cap)], axis=1)
+        cand_d = jnp.concatenate(
+            [d1f, d2, dl.reshape(nq, b_cap * leaf_cap)], axis=1)
+        cand_ok = jnp.concatenate(
+            [fresh1, fresh2, lmask.reshape(nq, b_cap * leaf_cap)], axis=1)
+        best_d, best_i = _merge_best(best_d, best_i, cand_d, cand_i,
+                                     cand_ok, k)
+        tq = best_d[:, -1][:, None]                      # k-th best NOW
+
+        # ---- children: lower bounds against the shrunk radius ---------
+        m = _margin(mechanism, d1, d2, d12)
+        lb_l, lb_r = m, -m
+        if use_cover_radius:
+            lb_l = jnp.maximum(lb_l, d1 - tree.cover_r1[node])
+            lb_r = jnp.maximum(lb_r, d2 - tree.cover_r2[node])
+        push_l = is_int & ~(lb_l > tq)
+        push_r = is_int & ~(lb_r > tq)
+
+        # ---- multi-push, nearer child last => popped first ------------
+        # (priority-ordered descent shrinks the radius fast); frontier
+        # flip keeps depth-first growth exactly as in range search.
+        l_near = d1 <= d2
+        far_n = jnp.where(l_near, right, left)
+        near_n = jnp.where(l_near, left, right)
+        far_d = jnp.where(l_near, d2, d1)
+        near_d = jnp.where(l_near, d1, d2)
+        far_m = jnp.where(l_near, lb_r, lb_l)
+        near_m = jnp.where(l_near, lb_l, lb_r)
+        far_p = jnp.where(l_near, push_r, push_l)
+        near_p = jnp.where(l_near, push_l, push_r)
+        cand_n = jnp.flip(jnp.stack([far_n, near_n], 2), 1).reshape(nq, -1)
+        cand_d = jnp.flip(jnp.stack([far_d, near_d], 2), 1).reshape(nq, -1)
+        cand_m = jnp.flip(jnp.stack([far_m, near_m], 2), 1).reshape(nq, -1)
+        cand_p = jnp.flip(jnp.stack([far_p, near_p], 2), 1).reshape(nq, -1)
+        stack_n, (stack_d, stack_m), sp, stack_ovf = _multi_push(
+            stack_n, (stack_d, stack_m), sp, stack_ovf, lane, cand_n,
+            (cand_d, cand_m), cand_p, stack_cap)
+
+        return (stack_n, stack_d, stack_m, sp, best_d, best_i, n_dist,
+                stack_ovf, it + 1)
+
+    init = (stack_n, stack_d, stack_m, sp, best_d, best_i, n_dist,
+            stack_ovf, jnp.zeros((), _I32))
+    (stack_n, stack_d, stack_m, sp, best_d, best_i, n_dist, stack_ovf,
+     it) = jax.lax.while_loop(cond, body, init)
+    ids = jnp.where(best_i == _ID_SENT, -1, best_i)
+    return KnnStats(ids, best_d, n_dist, stack_ovf, sp > 0, it)
+
+
+def knn_search_binary_tree(tree: BinaryHyperplaneTree, queries, k: int, *,
+                           metric_name: str, mechanism: str = "hilbert",
+                           stack_cap: int = 256, frontier: int = 8,
+                           use_cover_radius: bool = True,
+                           max_iter: int | None = None) -> KnnStats:
+    """Exact k-NN on a GHT/MHT via best-first shrinking-radius traversal.
+
+    Returns ids/distances ascending by (distance, id) — identical to
+    ``bruteforce.knn`` including k-boundary ties; slots beyond n (when
+    k > n) hold (-1, +inf).  ``frontier`` changes ``n_dist`` (the radius
+    shrinks at frontier granularity) but never the k-set.
+    """
+    _check_mechanism(metric_name, mechanism)
+    if frontier < 1:
+        raise ValueError(f"frontier must be >= 1, got {frontier}")
+    if k < 1:
+        raise ValueError(f"k must be >= 1, got {k}")
+    leaf_cap = int(np.max(np.asarray(tree.leaf_count))) if \
+        tree.leaf_count.shape[0] else 1
+    tree = jax.tree_util.tree_map(jnp.asarray, tree)
+    return _knn_binary(
+        tree, jnp.asarray(queries, jnp.float32),
+        metric_name=metric_name, mechanism=mechanism, k=k,
+        stack_cap=stack_cap, leaf_cap=max(leaf_cap, 1), frontier=frontier,
+        use_cover_radius=use_cover_radius, max_iter=max_iter)
 
 
 # ---------------------------------------------------------------------------
@@ -293,11 +547,12 @@ def search_binary_tree(tree: BinaryHyperplaneTree, queries, t, *,
 @functools.partial(
     jax.jit, static_argnames=("metric_name", "mechanism", "r_cap",
                               "stack_cap", "fan_cap", "frontier",
-                              "use_cover_radius"))
+                              "use_cover_radius", "max_iter"))
 def _search_sat(tree: SATree, queries: Array, t: Array, *,
                 metric_name: str, mechanism: str, r_cap: int,
                 stack_cap: int, fan_cap: int, frontier: int = 1,
-                use_cover_radius: bool) -> SearchStats:
+                use_cover_radius: bool,
+                max_iter: int | None = None) -> SearchStats:
     nq = queries.shape[0]
     b_cap = frontier
     lane = jnp.arange(nq, dtype=_I32)
@@ -322,7 +577,8 @@ def _search_sat(tree: SATree, queries: Array, t: Array, *,
     sp = jnp.ones((nq,), _I32)
     n_dist = jnp.ones((nq,), _I32)
     stack_ovf = jnp.zeros((nq,), bool)
-    max_iter = tree.data.shape[0] + 8
+    if max_iter is None:
+        max_iter = tree.data.shape[0] + 8
 
     def cond(st):
         (_, _, sp, _, _, _, _, _, it) = st
@@ -331,8 +587,8 @@ def _search_sat(tree: SATree, queries: Array, t: Array, *,
     def body(st):
         (stack_n, stack_d, sp, res_ids, res_cnt, n_dist, overflow,
          stack_ovf, it) = st
-        node, d_self, fvalid, sp = _pop_frontier(
-            stack_n, stack_d, sp, b_cap, stack_cap)     # all (Q, B)
+        node, (d_self,), fvalid, sp = _pop_frontier(
+            stack_n, (stack_d,), sp, b_cap, stack_cap)  # all (Q, B)
 
         # ---- frontier gather: every popped node's children, one tile --
         off = tree.child_start[node]
@@ -399,9 +655,9 @@ def _search_sat(tree: SATree, queries: Array, t: Array, *,
         cand_d = jnp.flip(jnp.where(jnp.isfinite(dc), dc, 0.0),
                           1).reshape(nq, -1)
         cand_m = jnp.flip(push, 1).reshape(nq, -1)
-        stack_n, stack_d, sp, stack_ovf = _multi_push(
-            stack_n, stack_d, sp, stack_ovf, lane, cand_n, cand_d, cand_m,
-            stack_cap)
+        stack_n, (stack_d,), sp, stack_ovf = _multi_push(
+            stack_n, (stack_d,), sp, stack_ovf, lane, cand_n, (cand_d,),
+            cand_m, stack_cap)
 
         return (stack_n, stack_d, sp, res_ids, res_cnt, n_dist, overflow,
                 stack_ovf, it + 1)
@@ -411,19 +667,21 @@ def _search_sat(tree: SATree, queries: Array, t: Array, *,
     (stack_n, stack_d, sp, res_ids, res_cnt, n_dist, overflow, stack_ovf,
      it) = jax.lax.while_loop(cond, body, init)
     return SearchStats(res_ids[:, :r_cap], res_cnt, n_dist, overflow,
-                       stack_ovf, it)
+                       stack_ovf, sp > 0, it)
 
 
 def search_sat(tree: SATree, queries, t, *, metric_name: str,
                mechanism: str = "hilbert", r_cap: int = 128,
                stack_cap: int = 4096, frontier: int = 8,
-               use_cover_radius: bool = True) -> SearchStats:
+               use_cover_radius: bool = True,
+               max_iter: int | None = None) -> SearchStats:
     """Range search on a DiSAT.  mechanism in {'hyperbolic','hilbert'}.
 
     ``frontier``: nodes popped per lane per iteration (static); result
     sets and per-query ``n_dist`` are identical for every B >= 1
     (DESIGN.md §3).  ``stack_cap`` (default 4096) bounds in-flight
-    breadth; ``stack_overflow`` reports violations.
+    breadth; ``stack_overflow`` reports violations.  ``max_iter``: see
+    ``search_binary_tree``.
     """
     _check_mechanism(metric_name, mechanism)
     if frontier < 1:
@@ -434,4 +692,164 @@ def search_sat(tree: SATree, queries, t, *, metric_name: str,
         tree, jnp.asarray(queries, jnp.float32), t,
         metric_name=metric_name, mechanism=mechanism, r_cap=r_cap,
         stack_cap=stack_cap, fan_cap=fan_cap, frontier=frontier,
-        use_cover_radius=use_cover_radius)
+        use_cover_radius=use_cover_radius, max_iter=max_iter)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("metric_name", "mechanism", "k", "stack_cap",
+                              "fan_cap", "frontier", "use_cover_radius",
+                              "max_iter"))
+def _knn_sat(tree: SATree, queries: Array, *, metric_name: str,
+             mechanism: str, k: int, stack_cap: int, fan_cap: int,
+             frontier: int = 1, use_cover_radius: bool,
+             max_iter: int | None = None) -> KnnStats:
+    nq = queries.shape[0]
+    b_cap = frontier
+    lane = jnp.arange(nq, dtype=_I32)
+
+    # root distance: computed once, counts once, seeds the best buffer
+    rootv = tree.data[tree.root]
+    d_root = one_distance(metric_name, queries,
+                          jnp.broadcast_to(rootv, queries.shape))
+    best_d = jnp.full((nq, k), jnp.inf, jnp.float32)
+    best_i = jnp.full((nq, k), _ID_SENT, _I32)
+    best_d = best_d.at[:, 0].set(d_root)
+    best_i = best_i.at[:, 0].set(tree.root)
+
+    stack_n = jnp.zeros((nq, stack_cap), _I32)
+    stack_n = stack_n.at[:, 0].set(tree.root)
+    stack_d = jnp.zeros((nq, stack_cap), jnp.float32)
+    stack_d = stack_d.at[:, 0].set(d_root)
+    stack_m = jnp.full((nq, stack_cap), -jnp.inf, jnp.float32)
+    sp = jnp.ones((nq,), _I32)
+    n_dist = jnp.ones((nq,), _I32)
+    stack_ovf = jnp.zeros((nq,), bool)
+    if max_iter is None:
+        max_iter = tree.data.shape[0] + 8
+
+    def cond(st):
+        (_, _, _, sp, _, _, _, _, it) = st
+        return jnp.any(sp > 0) & (it < max_iter)
+
+    def body(st):
+        (stack_n, stack_d, stack_m, sp, best_d, best_i, n_dist,
+         stack_ovf, it) = st
+        node, (d_self, pmargin), fvalid, sp = _pop_frontier(
+            stack_n, (stack_d, stack_m), sp, b_cap, stack_cap)
+
+        # best-first re-test against the now-smaller radius
+        t_pop = best_d[:, -1]
+        fvalid = fvalid & ~(pmargin > t_pop[:, None])
+        node = jnp.where(fvalid, node, 0)
+
+        # ---- frontier gather: every popped node's children, one tile --
+        off = tree.child_start[node]
+        fcnt = tree.child_count[node]
+        fcols = jnp.arange(fan_cap, dtype=_I32)[None, None, :]
+        cmask = fvalid[:, :, None] & (fcols < fcnt[:, :, None])  # (Q,B,F)
+        cslot = jnp.clip(off[:, :, None] + fcols, 0,
+                         jnp.maximum(tree.child_ids.shape[0] - 1, 0))
+        cids = tree.child_ids[cslot] if tree.child_ids.shape[0] else \
+            jnp.zeros((nq, b_cap, fan_cap), _I32)
+        cflat = cids.reshape(nq, b_cap * fan_cap)
+        dc = block_distance(
+            metric_name, queries, tree.data[cflat],
+            pts_norm_sq=tree.norm_sq[cflat]
+        ).reshape(nq, b_cap, fan_cap)                    # (Q, B, F)
+        dc = jnp.where(cmask, dc, jnp.inf)
+        n_dist = n_dist + jnp.sum(cmask, axis=(1, 2)).astype(_I32)
+
+        # ---- children -> best buffer; THEN the shrunk radius ----------
+        best_d, best_i = _merge_best(
+            best_d, best_i, dc.reshape(nq, b_cap * fan_cap), cflat,
+            cmask.reshape(nq, b_cap * fan_cap), k)
+        tq = best_d[:, -1][:, None, None]                # k-th best NOW
+
+        # winner c* over children ∪ {self}, per popped node
+        cmin_idx = jnp.argmin(dc, axis=2)                # (Q, B)
+        cmin = jnp.take_along_axis(dc, cmin_idx[:, :, None], 2)[:, :, 0]
+        self_wins = d_self < cmin
+        dmin = jnp.minimum(cmin, d_self)
+
+        if mechanism == "hilbert":
+            # denominator: d(c, c*) — sibling matrix row, or d(c, parent)
+            f = fcnt[:, :, None]
+            sib_base = tree.sib_off[node][:, :, None]
+            sib_idx = sib_base + fcols * f + cmin_idx[:, :, None]
+            sib_idx = jnp.clip(sib_idx, 0,
+                               jnp.maximum(tree.sib_d.shape[0] - 1, 0))
+            d_c_cstar = tree.sib_d[sib_idx] if tree.sib_d.shape[0] else \
+                jnp.ones((nq, b_cap, fan_cap), jnp.float32)
+            d_den = jnp.where(self_wins[:, :, None], tree.d_parent[cids],
+                              d_c_cstar)
+            # winner/degenerate-bisector guards: see the identical block
+            # in _search_sat for the FMA-contraction rationale
+            is_winner = (~self_wins[:, :, None]) & \
+                (fcols == cmin_idx[:, :, None])
+            margin = jnp.where(
+                (d_den > 1e-6) & ~is_winner,
+                (dc * dc - dmin[:, :, None] ** 2) /
+                (2.0 * jnp.maximum(d_den, 1e-12)),
+                -jnp.inf)
+        else:
+            margin = (dc - dmin[:, :, None]) * 0.5
+
+        lb = margin
+        if use_cover_radius:
+            lb = jnp.maximum(lb, dc - tree.cover_r[cids])
+        has_kids = tree.child_count[cids] > 0
+        push = cmask & ~(lb > tq) & has_kids
+
+        # ---- priority order within each node: sort children by
+        # DECREASING distance so the nearest lands on the stack top;
+        # masked entries (key -inf) sort last and are dropped by push.
+        key = jnp.where(push, dc, -jnp.inf)
+        order = jnp.argsort(-key, axis=2)
+        cids_o = jnp.take_along_axis(cids, order, 2)
+        dc_o = jnp.take_along_axis(dc, order, 2)
+        lb_o = jnp.take_along_axis(lb, order, 2)
+        push_o = jnp.take_along_axis(push, order, 2)
+
+        cand_n = jnp.flip(cids_o, 1).reshape(nq, -1)
+        cand_d = jnp.flip(jnp.where(jnp.isfinite(dc_o), dc_o, 0.0),
+                          1).reshape(nq, -1)
+        cand_l = jnp.flip(jnp.where(jnp.isfinite(lb_o), lb_o, 0.0),
+                          1).reshape(nq, -1)
+        cand_p = jnp.flip(push_o, 1).reshape(nq, -1)
+        stack_n, (stack_d, stack_m), sp, stack_ovf = _multi_push(
+            stack_n, (stack_d, stack_m), sp, stack_ovf, lane, cand_n,
+            (cand_d, cand_l), cand_p, stack_cap)
+
+        return (stack_n, stack_d, stack_m, sp, best_d, best_i, n_dist,
+                stack_ovf, it + 1)
+
+    init = (stack_n, stack_d, stack_m, sp, best_d, best_i, n_dist,
+            stack_ovf, jnp.zeros((), _I32))
+    (stack_n, stack_d, stack_m, sp, best_d, best_i, n_dist, stack_ovf,
+     it) = jax.lax.while_loop(cond, body, init)
+    ids = jnp.where(best_i == _ID_SENT, -1, best_i)
+    return KnnStats(ids, best_d, n_dist, stack_ovf, sp > 0, it)
+
+
+def knn_search_sat(tree: SATree, queries, k: int, *, metric_name: str,
+                   mechanism: str = "hilbert", stack_cap: int = 4096,
+                   frontier: int = 8, use_cover_radius: bool = True,
+                   max_iter: int | None = None) -> KnnStats:
+    """Exact k-NN on a DiSAT via best-first shrinking-radius traversal.
+
+    Same contract as ``knn_search_binary_tree``: ids/distances ascending
+    by (distance, id), identical to ``bruteforce.knn`` including ties;
+    ``frontier`` changes ``n_dist`` but never the k-set.
+    """
+    _check_mechanism(metric_name, mechanism)
+    if frontier < 1:
+        raise ValueError(f"frontier must be >= 1, got {frontier}")
+    if k < 1:
+        raise ValueError(f"k must be >= 1, got {k}")
+    fan_cap = max(tree.max_fanout, 1)
+    tree = jax.tree_util.tree_map(jnp.asarray, tree)
+    return _knn_sat(
+        tree, jnp.asarray(queries, jnp.float32),
+        metric_name=metric_name, mechanism=mechanism, k=k,
+        stack_cap=stack_cap, fan_cap=fan_cap, frontier=frontier,
+        use_cover_radius=use_cover_radius, max_iter=max_iter)

@@ -2,14 +2,24 @@
 path.
 
   PYTHONPATH=src python -m repro.launch.serve --n 40000 --dim 24 \
-      --queries 64 --backend both
+      --queries 64 --backend both --metric euclidean
 
 Backends:
   bruteforce : MXU pairwise scan + top-k (the dry-run `retrieval_cand`
                lowering)
-  index      : MHT metric index with Hilbert Exclusion (d_cos space)
-  both       : run both, assert identical results, report the distance-
-               evaluation saving (the paper's cost metric)
+  index      : MHT metric index with the selected exclusion mechanism,
+               range queries at a calibrated selectivity
+  both       : run bruteforce + index, assert identical results, report
+               the distance-evaluation saving (the paper's cost metric)
+  knn        : exact k-NN from the MHT shrinking-radius engine,
+               cross-checked against ``bruteforce.knn`` (ids and
+               distances)
+
+``--metric`` selects the distance (any registered metric, see
+``repro.core.metrics.names()``); simplex metrics (jsd / triangular) get
+their inputs row-normalised automatically.  ``hilbert`` requires the
+four-point property and is rejected otherwise — pass
+``--mechanism hyperbolic`` for metrics like manhattan/chebyshev.
 """
 
 from __future__ import annotations
@@ -20,7 +30,9 @@ import time
 import numpy as np
 
 from repro.core import bruteforce
-from repro.core.tree import build_mht, search_binary_tree
+from repro.core import metrics as metrics_lib
+from repro.core.tree import (build_mht, check_complete,
+                             knn_search_binary_tree, search_binary_tree)
 from repro.data.synthetic import metric_space
 
 
@@ -32,41 +44,68 @@ def main():
     ap.add_argument("--threshold-sel", type=float, default=1e-4,
                     help="range-query selectivity")
     ap.add_argument("--backend", default="both",
-                    choices=["bruteforce", "index", "both"])
+                    choices=["bruteforce", "index", "both", "knn"])
+    ap.add_argument("--metric", default="euclidean",
+                    choices=metrics_lib.names(),
+                    help="distance metric for data, index and queries")
     ap.add_argument("--mechanism", default="hilbert",
                     choices=["hilbert", "hyperbolic"])
+    ap.add_argument("--k", type=int, default=10,
+                    help="neighbours per query (knn backend)")
     args = ap.parse_args()
 
-    pts = metric_space(0, args.n + args.queries, args.dim, clustered=16)
+    m = metrics_lib.get(args.metric)
+    pts = metric_space(0, args.n + args.queries, args.dim, clustered=16,
+                       simplex=m.simplex)
     data, queries = pts[:args.n], pts[args.n:]
+
+    if args.backend == "knn":
+        t0 = time.time()
+        tree = build_mht(data, args.metric, leaf_size=32, seed=0)
+        print(f"index build: {time.time()-t0:.2f}s")
+        t0 = time.time()
+        st = knn_search_binary_tree(tree, queries, args.k,
+                                    metric_name=args.metric,
+                                    mechanism=args.mechanism)
+        check_complete(st, context="serve knn")
+        nd = float(np.mean(np.asarray(st.n_dist)))
+        print(f"index knn ({args.mechanism}, k={args.k}): "
+              f"{time.time()-t0:.2f}s  n_dist/query={nd:.0f}  "
+              f"({100*nd/args.n:.2f}% of brute force)")
+        t0 = time.time()
+        bf_d, bf_i = bruteforce.knn(np.asarray(data), np.asarray(queries),
+                                    metric_name=args.metric, k=args.k)
+        print(f"bruteforce knn: {time.time()-t0:.2f}s  "
+              f"n_dist/query={args.n}")
+        assert np.array_equal(np.asarray(st.ids), np.asarray(bf_i)), \
+            "knn ids differ from brute force!"
+        np.testing.assert_allclose(np.asarray(st.dists), np.asarray(bf_d),
+                                   atol=1e-5, rtol=1e-5)
+        print("knn results identical across backends")
+        return
+
     # calibrate a threshold at the requested selectivity
-    from repro.core import metrics as metrics_lib
-    m = metrics_lib.get("euclidean")
     sample = np.asarray(m.pairwise(queries[:32], data[:8192])).reshape(-1)
     t = float(np.quantile(sample, args.threshold_sel))
     print(f"serving n={args.n} dim={args.dim} queries={args.queries} "
-          f"t={t:.4f}")
+          f"metric={args.metric} t={t:.4f}")
 
     res_bf = res_ix = None
     if args.backend in ("bruteforce", "both"):
         t0 = time.time()
         cnt, res_bf = bruteforce.range_search(data, queries, t,
-                                              metric_name="euclidean")
+                                              metric_name=args.metric)
         print(f"bruteforce: {time.time()-t0:.2f}s  "
               f"n_dist/query={args.n}  hits={int(cnt.sum())}")
 
     if args.backend in ("index", "both"):
         t0 = time.time()
-        tree = build_mht(data, "euclidean", leaf_size=32, seed=0)
+        tree = build_mht(data, args.metric, leaf_size=32, seed=0)
         print(f"index build: {time.time()-t0:.2f}s")
         t0 = time.time()
-        st = search_binary_tree(tree, queries, t, metric_name="euclidean",
+        st = search_binary_tree(tree, queries, t, metric_name=args.metric,
                                 mechanism=args.mechanism, r_cap=1024)
-        if np.asarray(st.stack_overflow).any():
-            raise RuntimeError(
-                "traversal stack overflow: raise stack_cap / lower frontier")
-        if np.asarray(st.overflow).any():
-            raise RuntimeError("result buffer overflow: raise r_cap")
+        check_complete(st, context="serve index")
         res_ix = st.result_sets()
         nd = float(np.mean(np.asarray(st.n_dist)))
         print(f"index search ({args.mechanism}): {time.time()-t0:.2f}s  "

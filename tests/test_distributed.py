@@ -51,6 +51,104 @@ print(json.dumps({
     assert res["hilbert_nd"] < res["hyperbolic_nd"]
 
 
+def test_forest_fallback_shard_no_duplicates():
+    """Regression (forest duplicates): when n_shards doesn't divide n the
+    empty-shard fallback used to index data[:1] with offset 0, so global
+    id 0 was returned by several shards and res_cnt / n_dist were
+    double-counted.  Fallback shards are now marked (id_offset == -1) and
+    masked out: counts match brute force exactly and no id repeats."""
+    out = _run_sub("""
+import numpy as np, jax, json
+from repro.core.distributed import build_forest, forest_search, forest_knn
+from repro.core import bruteforce
+rng = np.random.default_rng(3)
+n = 9                      # 8 shards -> shards 5..7 are empty fallbacks
+data = rng.random((n, 8)).astype(np.float32)
+queries = np.concatenate([data[:2] + 1e-3, rng.random((6, 8))]) \
+    .astype(np.float32)    # first queries sit near id 0/1: hits guaranteed
+mesh = jax.make_mesh((8,), ("data",))
+forest = build_forest(data, "euclidean", mesh, kind="mht", leaf_size=4)
+assert int(np.asarray(forest.id_offset).min()) == -1  # fallbacks marked
+t = 2.0                    # radius covers every point: worst case for dups
+gids, cnt, nd = forest_search(forest, queries, t, metric_name="euclidean")
+gids = np.asarray(gids)
+valid = [sorted(x for x in row.tolist() if x >= 0) for row in gids]
+cnt_bf, sets_bf = bruteforce.range_search(data, queries, t,
+                                          metric_name="euclidean")
+no_dups = all(len(v) == len(set(v)) for v in valid)
+sets_ok = [set(v) for v in valid] == sets_bf
+cnt_ok = np.array_equal(np.asarray(cnt), np.asarray(cnt_bf))
+bf_d, bf_i = bruteforce.knn(data, queries, metric_name="euclidean", k=4)
+kd, ki, knd = forest_knn(forest, queries, 4, metric_name="euclidean")
+knn_ids_ok = np.array_equal(np.asarray(ki), np.asarray(bf_i))
+# atol 1e-4: the first queries sit ~1e-3 from a data point, where the
+# |x|^2+|y|^2-2xy expansion's cancellation noise is sqrt-amplified
+knn_d_ok = bool(np.allclose(np.asarray(kd), np.asarray(bf_d), atol=1e-4))
+print(json.dumps({"no_dups": no_dups, "sets_ok": sets_ok,
+                  "cnt_ok": cnt_ok, "knn_ids_ok": knn_ids_ok,
+                  "knn_d_ok": knn_d_ok,
+                  "nd_max": int(np.asarray(nd).max())}))
+""")
+    res = json.loads(out.strip().splitlines()[-1])
+    assert res["no_dups"] is True, "duplicate global ids returned"
+    assert res["sets_ok"] is True
+    assert res["cnt_ok"] is True, "res_cnt double-counted"
+    assert res["knn_ids_ok"] is True
+    assert res["knn_d_ok"] is True
+    # masked fallback shards contribute no distance evaluations: with 6
+    # real shards of <= 2 points each, per-query cost is bounded by n
+    assert res["nd_max"] <= 9
+
+
+def test_forest_knn_multidevice():
+    """forest_knn == bruteforce.knn (ids and distances) on a real multi-
+    shard mesh, and the truncation refusal fires on a tiny max_iter."""
+    out = _run_sub("""
+import numpy as np, jax, json
+from repro.core.distributed import build_forest, forest_knn, forest_search
+from repro.core import bruteforce
+rng = np.random.default_rng(0)
+data = rng.random((4000, 8)).astype(np.float32)
+queries = rng.random((16, 8)).astype(np.float32)
+mesh = jax.make_mesh((8,), ("data",))
+forest = build_forest(data, "euclidean", mesh, kind="mht", leaf_size=16)
+bf_d, bf_i = bruteforce.knn(data, queries, metric_name="euclidean", k=10)
+d_hil, i_hil, nd_hil = forest_knn(forest, queries, 10,
+                                  metric_name="euclidean",
+                                  mechanism="hilbert")
+d_hyp, i_hyp, nd_hyp = forest_knn(forest, queries, 10,
+                                  metric_name="euclidean",
+                                  mechanism="hyperbolic")
+ids_ok = np.array_equal(np.asarray(i_hil), np.asarray(bf_i)) and \
+    np.array_equal(np.asarray(i_hyp), np.asarray(bf_i))
+d_ok = bool(np.allclose(np.asarray(d_hil), np.asarray(bf_d), atol=1e-5))
+trunc_refused = False
+try:
+    forest_knn(forest, queries, 10, metric_name="euclidean", max_iter=2)
+except RuntimeError as e:
+    trunc_refused = "truncated" in str(e)
+trunc_refused_range = False
+try:
+    forest_search(forest, queries, 0.35, metric_name="euclidean",
+                  max_iter=2)
+except RuntimeError as e:
+    trunc_refused_range = "truncated" in str(e)
+print(json.dumps({
+    "ids_ok": ids_ok, "d_ok": d_ok,
+    "hilbert_nd": float(np.mean(np.asarray(nd_hil))),
+    "hyperbolic_nd": float(np.mean(np.asarray(nd_hyp))),
+    "trunc_refused": trunc_refused,
+    "trunc_refused_range": trunc_refused_range,
+}))
+""")
+    res = json.loads(out.strip().splitlines()[-1])
+    assert res["ids_ok"] is True
+    assert res["d_ok"] is True
+    assert res["hilbert_nd"] <= res["hyperbolic_nd"]
+    assert res["trunc_refused"] is True
+    assert res["trunc_refused_range"] is True
+
+
 @pytest.mark.slow
 def test_dryrun_cell_small_mesh():
     """Lower+compile one LM train cell on a 2x2 debug mesh (same code

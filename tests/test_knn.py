@@ -1,0 +1,212 @@
+"""Exact k-NN: both tree engines (and every frontier width) must return
+ids and distances identical to the ``bruteforce.knn`` oracle — including
+ties at the k-boundary (broken by (distance, id)) and k > n padding —
+while Hilbert never costs more distance evaluations than Hyperbolic.
+
+Also the silent-truncation regression tests: an exhausted iteration
+budget must set ``iter_overflow`` (never return a truncated set without
+a flag), and ``check_complete`` must refuse it.
+"""
+
+import numpy as np
+import pytest
+from _hypothesis_shim import given, settings, strategies as st
+
+from repro.core import bruteforce
+from repro.core.tree import (build_disat, build_ght, build_mht,
+                             check_complete, knn_search_binary_tree,
+                             knn_search_sat, search_binary_tree,
+                             search_sat)
+
+CASES = [
+    ("euclidean", False),
+    ("cosine", False),
+    ("jsd", True),
+    ("triangular", True),
+]
+
+
+def _data(simplex, n=700, d=8, nq=16, seed=0):
+    rng = np.random.default_rng(seed)
+    raw = rng.random((n + nq, d)).astype(np.float32)
+    if simplex:
+        raw = raw / raw.sum(-1, keepdims=True)
+    return raw[:n], raw[n:]
+
+
+def _bf(data, queries, metric, k):
+    d, i = bruteforce.knn(np.asarray(data), np.asarray(queries),
+                          metric_name=metric, k=k)
+    return np.asarray(d), np.asarray(i)
+
+
+def _assert_exact(st, bf_d, bf_i, ctx=""):
+    assert not np.asarray(st.stack_overflow).any(), ctx
+    assert not np.asarray(st.iter_overflow).any(), ctx
+    np.testing.assert_array_equal(np.asarray(st.ids), bf_i,
+                                  err_msg=f"{ctx}: ids")
+    np.testing.assert_allclose(np.asarray(st.dists), bf_d,
+                               atol=1e-5, rtol=1e-5, err_msg=f"{ctx}: d")
+
+
+@pytest.mark.parametrize("metric,simplex", CASES)
+@pytest.mark.parametrize("kind", ["ght", "mht"])
+def test_binary_knn_exact(metric, simplex, kind):
+    data, queries = _data(simplex)
+    bf_d, bf_i = _bf(data, queries, metric, 10)
+    build = {"ght": build_ght, "mht": build_mht}[kind]
+    tree = build(data, metric, leaf_size=16, seed=1)
+    nd = {}
+    for mech in ("hyperbolic", "hilbert"):
+        for b in (1, 4, 8):
+            st = knn_search_binary_tree(tree, queries, 10,
+                                        metric_name=metric,
+                                        mechanism=mech, frontier=b)
+            _assert_exact(st, bf_d, bf_i, f"{kind}/{metric}/{mech}/B={b}")
+            if b == 1:
+                nd[mech] = np.asarray(st.n_dist)
+    # per-query at B=1: hilbert never MORE distance evals
+    assert nd["hilbert"].sum() <= nd["hyperbolic"].sum()
+
+
+@pytest.mark.parametrize("metric,simplex", CASES)
+def test_disat_knn_exact(metric, simplex):
+    data, queries = _data(simplex, n=600)
+    bf_d, bf_i = _bf(data, queries, metric, 10)
+    tree = build_disat(data, metric, seed=2)
+    nd = {}
+    for mech in ("hyperbolic", "hilbert"):
+        for b in (1, 4, 8):
+            st = knn_search_sat(tree, queries, 10, metric_name=metric,
+                                mechanism=mech, frontier=b)
+            _assert_exact(st, bf_d, bf_i, f"disat/{metric}/{mech}/B={b}")
+            if b == 1:
+                nd[mech] = np.asarray(st.n_dist)
+    assert nd["hilbert"].sum() <= nd["hyperbolic"].sum()
+
+
+def test_knn_ties_at_k_boundary():
+    """Duplicated points straddling the k-boundary: the k-set must match
+    brute force exactly (ties broken toward smaller ids, lax.top_k's
+    rule)."""
+    rng = np.random.default_rng(5)
+    base = rng.random((40, 6)).astype(np.float32)
+    data = np.repeat(base, 4, axis=0)         # ids 4j..4j+3 coincide
+    queries = rng.random((7, 6)).astype(np.float32)
+    for k in (3, 6, 10):                      # cuts inside a tied group
+        bf_d, bf_i = _bf(data, queries, "euclidean", k)
+        for build, search in [(build_ght, knn_search_binary_tree),
+                              (build_mht, knn_search_binary_tree)]:
+            tree = build(data, "euclidean", leaf_size=8, seed=3)
+            for mech in ("hyperbolic", "hilbert"):
+                st = search(tree, queries, k, metric_name="euclidean",
+                            mechanism=mech)
+                _assert_exact(st, bf_d, bf_i, f"ties k={k} {mech}")
+        sat = build_disat(data, "euclidean", seed=3)
+        for mech in ("hyperbolic", "hilbert"):
+            st = knn_search_sat(sat, queries, k, metric_name="euclidean",
+                                mechanism=mech)
+            _assert_exact(st, bf_d, bf_i, f"ties sat k={k} {mech}")
+
+
+def test_knn_k_exceeds_n():
+    """k > n: all n points returned in (distance, id) order, the rest
+    padded with (-1, +inf) — identically in oracle and engines."""
+    data, queries = _data(False, n=20, nq=5)
+    for k in (20, 32):
+        bf_d, bf_i = _bf(data, queries, "euclidean", k)
+        if k > 20:
+            assert (bf_i[:, 20:] == -1).all()
+            assert np.isinf(bf_d[:, 20:]).all()
+        tree = build_mht(data, "euclidean", leaf_size=4, seed=1)
+        st = knn_search_binary_tree(tree, queries, k,
+                                    metric_name="euclidean")
+        _assert_exact(st, bf_d, bf_i, f"k={k}>n")
+        sat = build_disat(data, "euclidean", seed=1)
+        st = knn_search_sat(sat, queries, k, metric_name="euclidean")
+        _assert_exact(st, bf_d, bf_i, f"sat k={k}>n")
+
+
+def test_knn_k1_and_unsound_mechanism():
+    data, queries = _data(False, n=300)
+    bf_d, bf_i = _bf(data, queries, "euclidean", 1)
+    tree = build_ght(data, "euclidean", leaf_size=16, seed=1)
+    st = knn_search_binary_tree(tree, queries, 1, metric_name="euclidean")
+    _assert_exact(st, bf_d, bf_i, "k=1")
+    with pytest.raises(ValueError):
+        knn_search_binary_tree(tree, queries, 0, metric_name="euclidean")
+    mt = build_ght(data, "manhattan", leaf_size=16, seed=1)
+    with pytest.raises(ValueError):
+        knn_search_binary_tree(mt, queries, 3, metric_name="manhattan",
+                               mechanism="hilbert")
+    # hyperbolic is sound for any metric
+    bf_d, bf_i = _bf(data, queries, "manhattan", 3)
+    st = knn_search_binary_tree(mt, queries, 3, metric_name="manhattan",
+                                mechanism="hyperbolic")
+    _assert_exact(st, bf_d, bf_i, "manhattan hyperbolic")
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(40, 300), st.integers(1, 24), st.integers(0, 10**6))
+def test_knn_property(n, k, seed):
+    """Random (n, k, seed): MHT k-NN == brute force, ids and distances."""
+    rng = np.random.default_rng(seed)
+    raw = rng.random((n + 4, 6)).astype(np.float32)
+    data, queries = raw[:n], raw[n:]
+    bf_d, bf_i = _bf(data, queries, "euclidean", k)
+    tree = build_mht(data, "euclidean", leaf_size=8, seed=seed % 97)
+    st = knn_search_binary_tree(tree, queries, k, metric_name="euclidean",
+                                frontier=4)
+    _assert_exact(st, bf_d, bf_i, f"property n={n} k={k} seed={seed}")
+
+
+# ---------------------------------------------------------------------------
+# silent-truncation regression (bugfix): iteration budget exhaustion must
+# be flagged, and callers must refuse the truncated results
+# ---------------------------------------------------------------------------
+
+def test_range_iter_overflow_flagged():
+    """Before the fix, _search_binary/_search_sat exited silently at
+    max_iter with non-empty stacks; now every truncated lane flags
+    iter_overflow and check_complete refuses the stats."""
+    data, queries = _data(False, n=900)
+    tree = build_mht(data, "euclidean", leaf_size=16, seed=1)
+    st = search_binary_tree(tree, queries, 0.4, metric_name="euclidean",
+                            frontier=1, max_iter=2)
+    assert np.asarray(st.iter_overflow).any()
+    with pytest.raises(RuntimeError, match="truncated"):
+        check_complete(st)
+    sat = build_disat(data, "euclidean", seed=2)
+    st = search_sat(sat, queries, 0.4, metric_name="euclidean",
+                    frontier=1, max_iter=2)
+    assert np.asarray(st.iter_overflow).any()
+    with pytest.raises(RuntimeError, match="truncated"):
+        check_complete(st)
+
+
+def test_knn_iter_overflow_flagged():
+    data, queries = _data(False, n=900)
+    tree = build_mht(data, "euclidean", leaf_size=16, seed=1)
+    st = knn_search_binary_tree(tree, queries, 5, metric_name="euclidean",
+                                frontier=1, max_iter=2)
+    assert np.asarray(st.iter_overflow).any()
+    with pytest.raises(RuntimeError, match="truncated"):
+        check_complete(st)
+    sat = build_disat(data, "euclidean", seed=2)
+    st = knn_search_sat(sat, queries, 5, metric_name="euclidean",
+                        frontier=1, max_iter=2)
+    assert np.asarray(st.iter_overflow).any()
+    with pytest.raises(RuntimeError, match="truncated"):
+        check_complete(st)
+
+
+def test_iter_overflow_clear_on_complete_runs():
+    """The default budget (n_nodes + 8) provably suffices: the flag must
+    stay clear on every normal search."""
+    data, queries = _data(False, n=500)
+    tree = build_mht(data, "euclidean", leaf_size=16, seed=1)
+    st = search_binary_tree(tree, queries, 0.3, metric_name="euclidean")
+    assert not np.asarray(st.iter_overflow).any()
+    st = knn_search_binary_tree(tree, queries, 5, metric_name="euclidean")
+    assert not np.asarray(st.iter_overflow).any()
+    check_complete(st)
